@@ -1,0 +1,330 @@
+"""Shared tiny-scale reproduction harness (CPU).
+
+The paper's quantitative setting (2B/7B models, 80B training tokens) is
+out of reach in this container, so the benchmarks reproduce the paper's
+*qualitative* claims (DESIGN.md §6, claims C1–C5) at toy scale:
+
+1. pretrain a small target LM on a synthetic corpus whose ICL episodes
+   (random key→label mappings rendered as [SEP key ARROW label] shots)
+   carry the structural core of TREC/Banking77/Clinc-style tasks —
+   the model must learn induction to predict labels of seen keys;
+2. freeze it, train compressors (MemCom Phase-1/Phase-2, ICAE ladder)
+   with next-token loss on the same pretraining distribution — never on
+   task data, exactly the paper's §3 protocol;
+3. evaluate label accuracy on held-out episodes at 3×/6×/8× compression
+   against the fewer-shots baseline and the full-context upper bound.
+
+Artifacts (pretrained target, trained compressors) are cached under
+``artifacts/bench`` so individual benchmarks can rerun cheaply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_tree, save_tree
+from repro.config import LayerDesc, LayerLayout, MemComConfig, ModelConfig
+from repro.core import icae as icae_lib
+from repro.core import memcom
+from repro.data import (
+    ICLTaskSpec, PretrainStream, SyntheticVocab, eval_accuracy,
+)
+from repro.models import transformer as tfm
+from repro.optim import AdamW, clip_by_global_norm, warmup_constant, \
+    warmup_cosine
+
+ROOT = os.environ.get("BENCH_ROOT", "artifacts/bench")
+
+VOCAB = SyntheticVocab(num_keys=64, num_labels=64, num_words=256)
+
+# the evaluation suite: label-set sizes scaled from the paper's Table 1
+TASKS = {
+    "trec-coarse-like": ICLTaskSpec(VOCAB, num_labels=6, keys_per_label=8),
+    "hwu64-like": ICLTaskSpec(VOCAB, num_labels=16, keys_per_label=4),
+    "banking77-like": ICLTaskSpec(VOCAB, num_labels=32, keys_per_label=2),
+}
+
+SOURCE_LEN = 96  # many-shot budget (tokens) = 24 shots
+RATIOS = {3: 32, 6: 16, 8: 12}  # compression ratio -> m memory tokens
+
+
+def target_config(m_tokens: int = 32) -> ModelConfig:
+    return ModelConfig(
+        name="bench-target",
+        family="dense",
+        layout=LayerLayout.uniform(LayerDesc("attn", "dense"), 4),
+        d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+        vocab_size=VOCAB.size, max_seq=512, dtype="float32",
+        memcom=MemComConfig(num_memory_tokens=m_tokens),
+        source="tiny-scale reproduction target",
+    )
+
+
+def _stream(seed=0):
+    return PretrainStream(VOCAB, batch=16, seq_len=SOURCE_LEN + 32,
+                          split_choices=(int(SOURCE_LEN * 0.9), SOURCE_LEN,
+                                         int(SOURCE_LEN * 1.1)),
+                          seed=seed, icl_fraction=0.75)
+
+
+def _ckpt(name):
+    return os.path.join(ROOT, name)
+
+
+def log(msg):
+    print(f"[bench {time.strftime('%H:%M:%S')}] {msg}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: pretrain the frozen target
+# ---------------------------------------------------------------------------
+
+
+def induction_accuracy(cfg, params, *, seed=777, batches=4,
+                       logits_fn=None) -> float:
+    """Fraction of *repeat-key* label positions predicted correctly on the
+    training distribution — the capability the ICL eval depends on."""
+    stream = _stream(seed=seed)
+    if logits_fn is None:
+        logits_fn = jax.jit(
+            lambda p, t: tfm.forward(p, cfg, tokens=t)[0])
+    hits = total = 0
+    for i in range(batches):
+        b = stream.batch_at(i)
+        toks = np.concatenate([b["source"], b["target"]], axis=1)
+        logits = logits_fn(params, jnp.asarray(toks))
+        pred = np.asarray(logits).argmax(-1)[:, :-1]
+        nxt = toks[:, 1:]
+        is_arrow = toks[:, :-1] == VOCAB.ARROW
+        is_label = (nxt >= VOCAB.label_base) & (nxt < VOCAB.word_base)
+        # repeat keys only: the first occurrence is unpredictable
+        for r in range(toks.shape[0]):
+            seen = set()
+            for t in np.where(is_arrow[r] & is_label[r])[0]:
+                key = toks[r, t - 1]
+                if key in seen:
+                    hits += int(pred[r, t] == nxt[r, t])
+                    total += 1
+                seen.add(key)
+    return hits / max(total, 1)
+
+
+def get_or_pretrain_target(steps: int = 4000, force: bool = False):
+    """Pretrain (or extend) the frozen target.  Progress is checkpointed
+    every 500 steps under ``target`` with the step count in meta, so an
+    interrupted/undertrained run resumes instead of restarting."""
+    cfg = target_config()
+    path = _ckpt("target")
+    params = tfm.init_params(cfg, 0)
+    start = 0
+    if os.path.exists(path) and not force:
+        tree, meta = load_tree(path, params)
+        params = jax.tree.map(jnp.asarray, tree)
+        start = int(meta.get("steps", 0))
+        if start >= steps:
+            return cfg, params
+        log(f"extending target pretraining {start} -> {steps} steps …")
+    else:
+        log(f"pretraining target LM for {steps} steps …")
+    stream = _stream(seed=11)
+    opt = AdamW(lr=warmup_cosine(3e-3, 100, steps), weight_decay=0.01)
+    state = opt.init(params)  # NB: fresh moments on resume — acceptable here
+    probe = jax.jit(lambda p, t: tfm.forward(p, cfg, tokens=t)[0])
+
+    @jax.jit
+    def step_fn(params, state, tokens, mask):
+        def loss(p):
+            logits, aux = tfm.forward(p, cfg, tokens=tokens)
+            return memcom.next_token_loss(logits, tokens, mask) + aux["moe_loss"]
+
+        l, g = jax.value_and_grad(loss)(params)
+        g, _ = clip_by_global_norm(g, 1.0)
+        params, state = opt.step(params, g, state)
+        return params, state, l
+
+    for i in range(start, steps):
+        b = stream.batch_at(i)
+        toks = jnp.asarray(np.concatenate([b["source"], b["target"]], axis=1))
+        mask = jnp.asarray((np.asarray(toks) != VOCAB.PAD).astype(np.float32))
+        params, state, l = step_fn(params, state, toks, mask)
+        if (i + 1) % 500 == 0 or i == steps - 1:
+            ind = induction_accuracy(cfg, params, batches=1, logits_fn=probe)
+            log(f"  pretrain step {i}: loss {float(l):.4f} "
+                f"induction-acc {ind:.3f}")
+            save_tree(path, params, meta={"steps": i + 1,
+                                          "induction_acc": ind})
+    ind = induction_accuracy(cfg, params, logits_fn=probe)
+    log(f"final induction accuracy (repeat keys): {ind:.3f}")
+    save_tree(path, params, meta={"steps": steps, "induction_acc": ind})
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: compressor training (shared loop)
+# ---------------------------------------------------------------------------
+
+
+def train_compressor(kind: str, target_params, cfg: ModelConfig, *,
+                     steps: int = 300, lr: float = 2e-3, seed: int = 1,
+                     phase: int = 1, variant: str = "icae++",
+                     init_from=None, force: bool = False):
+    """kind: "memcom" | "icae".  Returns trained compressor params.
+
+    Phase-1 trains {memx, mem_tokens} (MemCom) / {lora|attn, mem_embed}
+    (ICAE); Phase-2 (MemCom) unfreezes the two stacks at a lower lr —
+    both per the paper §4 / A.2.
+    """
+    m = cfg.memcom.num_memory_tokens
+    flavor = variant if kind == "icae" else cfg.memcom.xattn_kind
+    tag = f"{kind}-{flavor}-m{m}-p{phase}-s{steps}-lr{lr}-sd{seed}"
+    path = _ckpt(tag)
+    if kind == "memcom":
+        comp = (init_from if init_from is not None
+                else memcom.init_memcom(cfg, target_params, seed))
+        mask = memcom.trainable_mask(comp, phase)
+
+        def loss_fn(c, batch):
+            c = jax.tree.map(
+                lambda x, mk: x if mk else jax.lax.stop_gradient(x), c, mask)
+            return memcom.memcom_loss(c, target_params, cfg, batch)
+    else:
+        comp = icae_lib.init_icae(cfg, target_params, variant=variant,
+                                  seed=seed)
+        mask = icae_lib.icae_trainable_mask(comp, variant)
+
+        def loss_fn(c, batch):
+            c = jax.tree.map(
+                lambda x, mk: x if mk else jax.lax.stop_gradient(x), c, mask)
+            return icae_lib.icae_loss(c, target_params, cfg, batch)
+
+    if os.path.exists(path) and not force:
+        tree, _ = load_tree(path, comp)
+        return jax.tree.map(jnp.asarray, tree), None
+
+    log(f"training {tag} for {steps} steps …")
+    opt = AdamW(lr=warmup_constant(lr, 30), mask=mask)
+    state = opt.init(comp)
+
+    @jax.jit
+    def step_fn(comp, state, batch):
+        (l, _aux), g = jax.value_and_grad(loss_fn, has_aux=True)(comp, batch)
+        g, _ = clip_by_global_norm(g, 1.0)
+        comp, state = opt.step(comp, g, state)
+        return comp, state, l
+
+    stream = _stream(seed=100 + seed)
+    losses = []
+    for i in range(steps):
+        b = stream.batch_at(i)
+        batch = {"source": jnp.asarray(b["source"]),
+                 "target": jnp.asarray(b["target"]),
+                 "target_mask": jnp.asarray(b["target_mask"])}
+        comp, state, l = step_fn(comp, state, batch)
+        losses.append(float(l))
+        if i % 100 == 0 or i == steps - 1:
+            log(f"  {tag} step {i}: loss {losses[-1]:.4f}")
+    save_tree(path, comp, meta={"losses_tail": losses[-20:]})
+    return comp, losses
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: evaluation — label accuracy through each serving path
+# ---------------------------------------------------------------------------
+
+
+def _pad_context(ctx: np.ndarray, to_len: int) -> np.ndarray:
+    """Left-pad with PAD so compile shapes are stable across episodes."""
+    out = np.full((to_len,), VOCAB.PAD, np.int32)
+    out[: len(ctx)] = ctx
+    return out
+
+
+def make_full_context_predictor(cfg, target_params, ctx_len):
+    label_ids = None
+
+    @jax.jit
+    def logits_fn(toks):
+        logits, _ = tfm.forward(target_params, cfg, tokens=toks)
+        return logits[0, -1]
+
+    def predict(context, query):
+        toks = np.concatenate([_pad_context(context, ctx_len), query])[None]
+        row = np.asarray(logits_fn(jnp.asarray(toks)))
+        ids = VOCAB.label_ids()
+        return int(ids[np.argmax(row[ids])] - VOCAB.label_base)
+
+    return predict
+
+
+def make_memcom_predictor(cfg, target_params, comp, ctx_len):
+    m = cfg.memcom.num_memory_tokens
+
+    @jax.jit
+    def logits_fn(source, query):
+        prefix, _ = memcom.compress(comp, cfg, source)
+        logits, _ = tfm.forward(target_params, cfg, tokens=query,
+                                prefix=prefix, mask_offset=m)
+        return logits[0, -1]
+
+    def predict(context, query):
+        src = _pad_context(context, ctx_len)[None]
+        row = np.asarray(logits_fn(jnp.asarray(src), jnp.asarray(query[None])))
+        ids = VOCAB.label_ids()
+        return int(ids[np.argmax(row[ids])] - VOCAB.label_base)
+
+    return predict
+
+
+def make_icae_predictor(cfg, target_params, comp, ctx_len):
+    @jax.jit
+    def logits_fn(source, query):
+        soft = icae_lib.icae_compress(comp, cfg, source)
+        q_emb = jnp.take(target_params["embed"]["tokens"], query, axis=0)
+        embeds = jnp.concatenate([soft.astype(q_emb.dtype), q_emb], axis=1)
+        logits, _ = tfm.forward(target_params, cfg, embeds=embeds)
+        return logits[0, -1]
+
+    def predict(context, query):
+        src = _pad_context(context, ctx_len)[None]
+        row = np.asarray(logits_fn(jnp.asarray(src), jnp.asarray(query[None])))
+        ids = VOCAB.label_ids()
+        return int(ids[np.argmax(row[ids])] - VOCAB.label_base)
+
+    return predict
+
+
+def evaluate(predict, *, budget, query_budget=None, n_episodes=12,
+             queries_per_episode=12, seed=0):
+    out = {}
+    for name, task in TASKS.items():
+        out[name] = eval_accuracy(
+            predict, task, budget=budget, query_budget=query_budget,
+            n_episodes=n_episodes, queries_per_episode=queries_per_episode,
+            seed=seed)
+    out["mean"] = float(np.mean(list(out.values())))
+    return out
+
+
+def write_result(name: str, payload: dict):
+    os.makedirs(ROOT, exist_ok=True)
+    path = os.path.join(ROOT, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    log(f"wrote {path}")
+
+
+def fmt_table(rows, header):
+    widths = [max(len(str(r[i])) for r in [header] + rows)
+              for i in range(len(header))]
+    lines = [" | ".join(str(h).ljust(w) for h, w in zip(header, widths))]
+    lines.append("-+-".join("-" * w for w in widths))
+    for r in rows:
+        lines.append(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)

@@ -1,0 +1,87 @@
+"""Paper Table 2/3 + Figure 2 analog: accuracy vs compression ratio.
+
+Methods: full-context upper bound, fewer-shots baseline, ICAE++, MemCom
+(Phase-1), MemCom-P2 — each evaluated at 3×/6×/8× compression of the
+many-shot budget.  Claims reproduced: C1 (baseline collapses at high
+ratio, MemCom degrades gently) and C4 (Phase-2 adds small gains).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks import common as C
+
+
+def run(steps: int = 300, ratios=(3, 6, 8), with_p2: bool = True,
+        eval_episodes: int = 12):
+    cfg0, target = C.get_or_pretrain_target()
+    results = {"source_len": C.SOURCE_LEN, "rows": []}
+
+    # upper bound: full many-shot context, no compression
+    upper = C.evaluate(
+        C.make_full_context_predictor(cfg0, target, C.SOURCE_LEN),
+        budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+    results["rows"].append(("full-context", C.SOURCE_LEN, "-", upper))
+    C.log(f"upper bound: {upper}")
+
+    for ratio in ratios:
+        m = C.RATIOS[ratio]
+        cfg = cfg0.replace(
+            memcom=dataclasses.replace(cfg0.memcom, num_memory_tokens=m))
+
+        # fewer-shots baseline: same construction, budget = t / ratio
+        base = C.evaluate(
+            C.make_full_context_predictor(cfg, target, m),
+            budget=m, query_budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+        results["rows"].append((f"baseline", m, f"{ratio}x", base))
+        C.log(f"baseline @{ratio}x (m={m}): {base}")
+
+        icae_pp, _ = C.train_compressor("icae", target, cfg, steps=steps,
+                                        variant="icae++")
+        acc = C.evaluate(
+            C.make_icae_predictor(cfg, target, icae_pp, C.SOURCE_LEN),
+            budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+        results["rows"].append((f"icae++", m, f"{ratio}x", acc))
+        C.log(f"icae++ @{ratio}x: {acc}")
+
+        mc, _ = C.train_compressor("memcom", target, cfg, steps=steps,
+                                   phase=1)
+        acc = C.evaluate(
+            C.make_memcom_predictor(cfg, target, mc, C.SOURCE_LEN),
+            budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+        results["rows"].append((f"memcom", m, f"{ratio}x", acc))
+        C.log(f"memcom @{ratio}x: {acc}")
+
+        if with_p2:
+            mc2, _ = C.train_compressor(
+                "memcom", target, cfg, steps=steps // 2, lr=2e-4, phase=2,
+                init_from=mc)
+            acc = C.evaluate(
+                C.make_memcom_predictor(cfg, target, mc2, C.SOURCE_LEN),
+                budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+            results["rows"].append((f"memcom-p2", m, f"{ratio}x", acc))
+            C.log(f"memcom-p2 @{ratio}x: {acc}")
+
+    rows = [(meth, m, r, round(acc["mean"], 3),
+             *(round(acc[t], 3) for t in C.TASKS))
+            for meth, m, r, acc in results["rows"]]
+    print("\n" + C.fmt_table(
+        rows, ("method", "m", "ratio", "mean", *C.TASKS)) + "\n")
+    C.write_result("compression_tradeoff", {
+        "rows": [dict(method=meth, m=m, ratio=r, acc=acc)
+                 for meth, m, r, acc in results["rows"]],
+        "source_len": C.SOURCE_LEN, "steps": steps})
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        run(steps=120, ratios=(8,), with_p2=False, eval_episodes=6)
+    else:
+        run(steps=args.steps)

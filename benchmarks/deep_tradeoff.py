@@ -1,0 +1,121 @@
+"""Deep-trained headline comparison at the hardest ratio (8×).
+
+The 150-step suite (compression_tradeoff) is 4 orders of magnitude below
+the paper's 80 B-token compressor budget; this benchmark concentrates
+the remaining budget on the single headline cell — MemCom vs ICAE++ vs
+fewer-shots baseline at 8× — with one continuous training run per
+compressor and periodic accuracy probes, so the *trajectory* (does
+compressed-context accuracy climb with compressor training?) is recorded
+even where the endpoint is compute-limited.
+
+    PYTHONPATH=src python -m benchmarks.deep_tradeoff --steps 600
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core import icae as icae_lib
+from repro.core import memcom
+from repro.optim import AdamW, clip_by_global_norm, warmup_constant
+
+
+def _train_with_probes(kind, target, cfg, *, steps, probe_every, lr,
+                       eval_episodes, variant="icae++"):
+    if kind == "memcom":
+        comp = memcom.init_memcom(cfg, target, 1)
+        mask = memcom.trainable_mask(comp, 1)
+
+        def loss_fn(c, batch):
+            c = jax.tree.map(
+                lambda x, mk: x if mk else jax.lax.stop_gradient(x), c, mask)
+            return memcom.memcom_loss(c, target, cfg, batch)
+
+        make = C.make_memcom_predictor
+    else:
+        comp = icae_lib.init_icae(cfg, target, variant=variant, seed=1)
+        mask = icae_lib.icae_trainable_mask(comp, variant)
+
+        def loss_fn(c, batch):
+            c = jax.tree.map(
+                lambda x, mk: x if mk else jax.lax.stop_gradient(x), c, mask)
+            return icae_lib.icae_loss(c, target, cfg, batch)
+
+        make = C.make_icae_predictor
+
+    opt = AdamW(lr=warmup_constant(lr, 30), mask=mask)
+    state = opt.init(comp)
+
+    @jax.jit
+    def step_fn(comp, state, batch):
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(comp, batch)
+        g, _ = clip_by_global_norm(g, 1.0)
+        comp, state = opt.step(comp, g, state)
+        return comp, state, l
+
+    stream = C._stream(seed=123)
+    traj = []
+    for i in range(steps):
+        b = stream.batch_at(i)
+        batch = {k: jnp.asarray(b[k]) for k in
+                 ("source", "target", "target_mask")}
+        comp, state, l = step_fn(comp, state, batch)
+        if (i + 1) % probe_every == 0:
+            acc = C.evaluate(make(cfg, target, comp, C.SOURCE_LEN),
+                             budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+            traj.append(dict(steps=i + 1, loss=float(l), acc=acc))
+            C.log(f"  {kind} step {i+1}: loss {float(l):.3f} "
+                  f"mean-acc {acc['mean']:.3f}")
+    return comp, traj
+
+
+def run(steps: int = 600, ratio: int = 8, probe_every: int = 200,
+        eval_episodes: int = 12, kinds=("memcom", "icae")):
+    cfg0, target = C.get_or_pretrain_target()
+    m = C.RATIOS[ratio]
+    cfg = cfg0.replace(
+        memcom=dataclasses.replace(cfg0.memcom, num_memory_tokens=m))
+
+    rows = []
+    full = C.evaluate(C.make_full_context_predictor(cfg, target, C.SOURCE_LEN),
+                      budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+    base = C.evaluate(C.make_full_context_predictor(cfg, target, m),
+                      budget=m, query_budget=C.SOURCE_LEN,
+                      n_episodes=eval_episodes)
+    rows.append((f"full-context-{C.SOURCE_LEN}", full))
+    rows.append((f"baseline-{m}", base))
+    C.log(f"full-context {full['mean']:.3f} | baseline@{ratio}x "
+          f"{base['mean']:.3f}")
+
+    trajectories = {}
+    for kind in kinds:
+        C.log(f"deep-training {kind} for {steps} steps …")
+        _, traj = _train_with_probes(
+            kind, target, cfg, steps=steps, probe_every=probe_every,
+            lr=2e-3, eval_episodes=eval_episodes)
+        trajectories[kind] = traj
+        rows.append((f"{kind}-{steps}", traj[-1]["acc"]))
+
+    table = [(n, round(a["mean"], 3), *(round(a[t], 3) for t in C.TASKS))
+             for n, a in rows]
+    print("\n" + C.fmt_table(table, ("method", "mean", *C.TASKS)))
+    C.write_result("deep_tradeoff", {
+        "ratio": ratio, "m": m, "steps": steps,
+        "rows": [dict(method=n, acc=a) for n, a in rows],
+        "trajectories": trajectories})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--probe-every", type=int, default=200)
+    ap.add_argument("--kinds", default="memcom,icae")
+    args = ap.parse_args()
+    run(steps=args.steps, probe_every=args.probe_every,
+        kinds=tuple(args.kinds.split(",")))

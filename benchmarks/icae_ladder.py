@@ -1,0 +1,62 @@
+"""Paper Figure 3b / Table 4 analog: the compressor-capacity ladder.
+
+ICAE → ICAE+ → ICAE++ → MemCom, all at the highest (8×) compression ratio
+on the most demanding setting — reproducing claim C2 (compressor capacity
+matters) and C3 (layer-wise compression beats final-layer compression at
+equal inference cost).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks import common as C
+
+
+def run(steps: int = 300, ratio: int = 8, eval_episodes: int = 12):
+    cfg0, target = C.get_or_pretrain_target()
+    m = C.RATIOS[ratio]
+    cfg = cfg0.replace(
+        memcom=dataclasses.replace(cfg0.memcom, num_memory_tokens=m))
+
+    rows = []
+    base = C.evaluate(
+        C.make_full_context_predictor(cfg, target, m),
+        budget=m, query_budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+    rows.append((f"baseline-{m}", base))
+    full = C.evaluate(
+        C.make_full_context_predictor(cfg, target, C.SOURCE_LEN),
+        budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+    rows.append((f"baseline-{C.SOURCE_LEN}", full))
+
+    for variant in ("icae", "icae+", "icae++"):
+        comp, _ = C.train_compressor("icae", target, cfg, steps=steps,
+                                     variant=variant)
+        acc = C.evaluate(
+            C.make_icae_predictor(cfg, target, comp, C.SOURCE_LEN),
+            budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+        rows.append((variant, acc))
+        C.log(f"{variant}: {acc}")
+
+    mc, _ = C.train_compressor("memcom", target, cfg, steps=steps, phase=1)
+    acc = C.evaluate(
+        C.make_memcom_predictor(cfg, target, mc, C.SOURCE_LEN),
+        budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+    rows.append(("memcom", acc))
+    C.log(f"memcom: {acc}")
+
+    table = [(name, round(acc["mean"], 3), *(round(acc[t], 3) for t in C.TASKS))
+             for name, acc in rows]
+    print("\n" + C.fmt_table(table, ("method", "mean", *C.TASKS)) + "\n")
+    C.write_result("icae_ladder", {
+        "ratio": ratio, "m": m, "steps": steps,
+        "rows": [dict(method=n, acc=a) for n, a in rows]})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    run(steps=args.steps)

@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks: wall-clock of the streaming-jnp production
+paths on CPU (informational — TPU is the target), plus the analytic
+FLOPs/bytes and arithmetic intensity per kernel invocation that the
+roofline model uses.  The Pallas kernels themselves are *validated* in
+tests (interpret mode executes Python per block — timing it is
+meaningless), so what's timed here is the same math through XLA:CPU.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels import jnp_impl, ops
+
+
+def _timeit(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def t(*s):
+        return jnp.asarray(rng.standard_normal(s), jnp.float32)
+
+    # MemCom 1-head xattn at paper-ish shapes (scaled to CPU)
+    for (B, M, T, D) in [(1, 64, 768, 256), (1, 128, 1536, 256)]:
+        q, k, v = t(B, M, D), t(B, T, D), t(B, T, D)
+        fn = jax.jit(lambda q, k, v: ops.memcom_xattn(q, k, v, impl="jnp"))
+        sec = _timeit(fn, q, k, v)
+        flops = 2 * B * (M * D * T * 2)  # QK^T + PV
+        bytes_ = 4 * B * (M * D + 2 * T * D + M * D)
+        rows.append(("memcom_xattn", f"{B}x{M}x{T}x{D}", sec * 1e3,
+                     flops / 1e9, flops / bytes_))
+
+    # flash-style causal self-attention
+    for (B, S, H, Dh) in [(1, 1024, 8, 64), (1, 2048, 8, 64)]:
+        q, k, v = t(B, S, H, Dh), t(B, S, H, Dh), t(B, S, H, Dh)
+        fn = jax.jit(lambda q, k, v: ops.self_attention_causal(
+            q, k, v, impl="jnp"))
+        sec = _timeit(fn, q, k, v)
+        flops = 2 * B * H * S * S * Dh * 2 / 2  # causal half
+        bytes_ = 4 * B * S * H * Dh * 4
+        rows.append(("causal_attn", f"{B}x{S}x{H}x{Dh}", sec * 1e3,
+                     flops / 1e9, flops / bytes_))
+
+    # grouped matmul (MoE)
+    for (E, Cc, D, F) in [(8, 256, 256, 512)]:
+        x, w = t(E, Cc, D), t(E, D, F)
+        fn = jax.jit(lambda x, w: ops.gmm(x, w, impl="jnp"))
+        sec = _timeit(fn, x, w)
+        flops = 2 * E * Cc * D * F
+        bytes_ = 4 * (E * Cc * D + E * D * F + E * Cc * F)
+        rows.append(("moe_gmm", f"{E}x{Cc}x{D}x{F}", sec * 1e3,
+                     flops / 1e9, flops / bytes_))
+
+    # SSD chunked scan
+    for (B, S, H, P, N) in [(1, 2048, 8, 64, 64)]:
+        x = t(B, S, H, P)
+        dt = jnp.abs(t(B, S, H)) * 0.1
+        A = -jnp.abs(t(H))
+        Bm, Cm = t(B, S, 1, N), t(B, S, 1, N)
+        fn = jax.jit(lambda *a: jnp_impl.ssd_chunked(*a, chunk=128))
+        sec = _timeit(fn, x, dt, A, Bm, Cm)
+        Q = 128
+        flops = B * S * H * (2 * Q * N + 2 * Q * P + 4 * N * P)
+        bytes_ = 4 * B * S * H * (P + N * 2 + 1) * 2
+        rows.append(("ssd_scan", f"{B}x{S}x{H}x{P}x{N}", sec * 1e3,
+                     flops / 1e9, flops / bytes_))
+
+    table = [(n, s, f"{ms:.1f}", f"{gf:.2f}", f"{ai:.1f}")
+             for n, s, ms, gf, ai in rows]
+    print("\n" + C.fmt_table(
+        table, ("kernel", "shape", "ms (CPU jnp)", "GFLOP", "arith-int")) + "\n")
+    C.write_result("kernel_bench", {
+        "rows": [dict(kernel=n, shape=s, ms=ms, gflop=gf, intensity=ai)
+                 for n, s, ms, gf, ai in rows]})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Serving-cost benchmark: the paper's actual deliverable — decode cost
+against a compressed m-slot cache vs the full t-token cache.
+
+Measures (CPU wall-clock, informational) and reports the structural
+ratios that transfer to TPU: per-step attended KV slots, cache bytes,
+attention FLOPs.  The 32k-decode roofline cells in EXPERIMENTS.md §Perf
+make the same comparison at production scale from the compiled dry-run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import memcom
+from repro.models import transformer as tfm
+from repro.serving.engine import materialize_prefix, write_prefix_to_cache
+from repro.utils.pytree import tree_bytes
+
+
+def run(ratio: int = 8, decode_steps: int = 16):
+    import dataclasses
+
+    cfg0, target = C.get_or_pretrain_target()
+    m = C.RATIOS[ratio]
+    cfg0 = cfg0.replace(
+        memcom=dataclasses.replace(cfg0.memcom, num_memory_tokens=m))
+    t = C.SOURCE_LEN
+    B = 4
+    rng = np.random.default_rng(0)
+    source = jnp.asarray(rng.integers(4, cfg0.vocab_size, (B, t)), jnp.int32)
+
+    def decode_loop(cache, start):
+        @jax.jit
+        def step(cache, tok, i):
+            logits, aux = tfm.forward(target, cfg0, tokens=tok, cache=cache,
+                                      cache_index=i, decode=True)
+            return aux["cache"], jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+        tok = jnp.ones((B, 1), jnp.int32)
+        cache, tok = step(cache, tok, start)  # compile
+        jax.block_until_ready(tok)
+        t0 = time.perf_counter()
+        for i in range(decode_steps):
+            cache, tok = step(cache, tok, start + 1 + i)
+        jax.block_until_ready(tok)
+        return (time.perf_counter() - t0) / decode_steps
+
+    # vanilla: prefill t tokens, decode against t-slot cache
+    full_cache = tfm.init_cache(cfg0, B, t + decode_steps + 2)
+    _, aux = tfm.forward(target, cfg0, tokens=source, cache=full_cache,
+                         cache_index=0)
+    sec_full = decode_loop(aux["cache"], t)
+    bytes_full = tree_bytes(aux["cache"])
+
+    # compressed: m memory slots + decode window
+    mc = memcom.init_memcom(cfg0, target, 1)
+    prefix, _ = memcom.compress(mc, cfg0, source)
+    kv = materialize_prefix(target, cfg0, prefix)
+    small_cache = tfm.init_cache(cfg0, B, m + decode_steps + 2)
+    small_cache = write_prefix_to_cache(cfg0, small_cache, kv)
+    sec_comp = decode_loop(small_cache, m)
+    bytes_comp = tree_bytes(small_cache)
+
+    rows = [
+        ("full-context", t, f"{sec_full*1e3:.2f}", f"{bytes_full/1e6:.2f}"),
+        (f"memcom-{ratio}x", m, f"{sec_comp*1e3:.2f}", f"{bytes_comp/1e6:.2f}"),
+    ]
+    print("\n" + C.fmt_table(
+        rows, ("serving path", "KV slots", "ms/token (CPU)", "cache MB")) + "\n")
+    print(f"cache-bytes ratio: {bytes_full / bytes_comp:.2f}x "
+          f"(structural, transfers to TPU)\n")
+    C.write_result("serving_bench", {
+        "ratio": ratio, "m": m, "t": t,
+        "ms_full": sec_full * 1e3, "ms_compressed": sec_comp * 1e3,
+        "cache_bytes_full": bytes_full, "cache_bytes_compressed": bytes_comp})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Table 6 analog: cross-attention module design ablation.
+
+1-head (paper default) vs MHA vs MQA, trained Phase-1-only at 8×
+compression — reproducing claim C5 (1-head is the best overall choice).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks import common as C
+
+
+def run(steps: int = 300, ratio: int = 8, eval_episodes: int = 12):
+    cfg0, target = C.get_or_pretrain_target()
+    m = C.RATIOS[ratio]
+
+    rows = []
+    for kind, heads in (("1head", 1), ("mha", 4), ("mqa", 4)):
+        cfg = cfg0.replace(memcom=dataclasses.replace(
+            cfg0.memcom, num_memory_tokens=m, xattn_kind=kind,
+            xattn_heads=heads))
+        comp, _ = C.train_compressor(
+            "memcom", target, cfg, steps=steps, phase=1,
+            seed={"1head": 1, "mha": 2, "mqa": 3}[kind])
+        acc = C.evaluate(
+            C.make_memcom_predictor(cfg, target, comp, C.SOURCE_LEN),
+            budget=C.SOURCE_LEN, n_episodes=eval_episodes)
+        rows.append((kind, acc))
+        C.log(f"xattn {kind}: {acc}")
+
+    table = [(n, round(a["mean"], 3), *(round(a[t], 3) for t in C.TASKS))
+             for n, a in rows]
+    print("\n" + C.fmt_table(table, ("xattn", "mean", *C.TASKS)) + "\n")
+    C.write_result("xattn_ablation", {
+        "ratio": ratio, "m": m, "steps": steps,
+        "rows": [dict(kind=n, acc=a) for n, a in rows]})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    run(steps=args.steps)

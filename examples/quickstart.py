@@ -1,0 +1,51 @@
+"""Quickstart: the MemCom pipeline end to end in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a (reduced) model config and a frozen Target-LLM.
+2. Wrap it with a MemCom compressor (Source-LLM + Memory-LLM + per-layer
+   1-head cross-attention + learnable memory tokens).
+3. Compress a many-shot prompt into m per-layer memory representations.
+4. Serve: the target attends to m compressed slots instead of t tokens.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import memcom
+from repro.models import transformer as tfm
+from repro.serving.engine import ServingEngine, materialize_prefix
+from repro.utils.pytree import tree_bytes
+
+# 1. a frozen target model (reduced config of the smollm-135m family)
+cfg = get_smoke_config("smollm-135m")
+target = tfm.init_params(cfg, seed=0)
+print(f"target: {cfg.name}, {cfg.num_layers} layers, d={cfg.d_model}, "
+      f"m={cfg.memcom.num_memory_tokens} memory tokens")
+
+# 2. the compressor (untrained here — see examples/train_memcom.py)
+compressor = memcom.init_memcom(cfg, target, seed=1)
+
+# 3. offline compression: t=64 many-shot tokens -> m per-layer slots
+rng = np.random.default_rng(0)
+t = 64
+source = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, t)), jnp.int32)
+prefix, _ = memcom.compress(compressor, cfg, source)
+reps = prefix["period"]["l0"]["h"]
+print(f"compressed: {t} tokens -> per-layer {tuple(reps.shape[1:])} "
+      f"(layers stacked: {reps.shape[0]})")
+
+# 4. serve against the compressed cache
+kv = materialize_prefix(target, cfg, prefix)
+m = cfg.memcom.num_memory_tokens
+full_kv_bytes = tree_bytes(tfm.init_cache(cfg, 1, t))
+comp_kv_bytes = tree_bytes(kv)
+print(f"KV cache: {full_kv_bytes/1e3:.1f} KB -> {comp_kv_bytes/1e3:.1f} KB "
+      f"({full_kv_bytes/comp_kv_bytes:.1f}x smaller)")
+
+engine = ServingEngine(cfg, target, slots=1, max_len=m + 32)
+engine.seat_compressed(kv)
+prompt = rng.integers(4, cfg.vocab_size, (1, 8)).astype(np.int32)
+out = engine.generate(prompt, max_new=8)
+print(f"generated (attending to {m} compressed slots): {out[0].tolist()}")

@@ -1,0 +1,125 @@
+"""End-to-end training driver: pretrain a target LM, then train a MemCom
+compressor against it (Phase-1, optionally Phase-2) with the
+fault-tolerant Trainer — checkpoints, restart, metrics, preemption.
+
+    PYTHONPATH=src python examples/train_memcom.py                # CPU-sized
+    PYTHONPATH=src python examples/train_memcom.py --preset 100m  # spec-sized
+
+The 100m preset is the "train a ~100M model for a few hundred steps"
+configuration (smollm-135m family at full width); the default preset is
+CPU-sized so the example finishes in minutes in this container.  Both run
+the same code path as the production launcher (repro.launch.train) minus
+the mesh.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LayerDesc, LayerLayout, MemComConfig, ModelConfig
+from repro.configs import get_config
+from repro.core import memcom
+from repro.data import PretrainStream, SyntheticVocab
+from repro.models import transformer as tfm
+from repro.optim import AdamW, warmup_constant
+from repro.train import Trainer, TrainerConfig, build_train_step
+
+VOCAB = SyntheticVocab()
+
+
+def make_cfg(preset: str) -> ModelConfig:
+    if preset == "100m":
+        # smollm-135m backbone on the synthetic vocab (~100M params)
+        return get_config("smollm-135m").replace(
+            vocab_size=VOCAB.size, dtype="float32",
+            memcom=MemComConfig(num_memory_tokens=32))
+    return ModelConfig(
+        name="example-lm", family="dense",
+        layout=LayerLayout.uniform(LayerDesc("attn", "dense"), 4),
+        d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+        vocab_size=VOCAB.size, max_seq=512, dtype="float32",
+        memcom=MemComConfig(num_memory_tokens=24), source="example")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["cpu", "100m"], default="cpu")
+    ap.add_argument("--pretrain-steps", type=int, default=200)
+    ap.add_argument("--memcom-steps", type=int, default=200)
+    ap.add_argument("--phase2", action="store_true")
+    ap.add_argument("--ckpt", default="artifacts/example_train")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    stream = PretrainStream(VOCAB, batch=8, seq_len=96,
+                            split_choices=(64, 72), seed=0)
+
+    # ---- stage 1: pretrain the target --------------------------------
+    print(f"== stage 1: pretraining target ({cfg.param_count()/1e6:.1f}M "
+          f"params) for {args.pretrain_steps} steps")
+    params = tfm.init_params(cfg, 0)
+    opt = AdamW(lr=warmup_constant(3e-3, 20))
+
+    def lm_loss(p, batch):
+        logits, aux = tfm.forward(p, cfg, tokens=batch["tokens"])
+        return (memcom.next_token_loss(logits, batch["tokens"],
+                                       batch.get("mask"))
+                + aux["moe_loss"], {})
+
+    step = jax.jit(build_train_step(lm_loss, opt))
+
+    def lm_batch_at(i):
+        b = stream.batch_at(i)
+        toks = np.concatenate([b["source"], b["target"]], axis=1)
+        return {"tokens": jnp.asarray(toks),
+                "mask": jnp.asarray((toks != VOCAB.PAD).astype(np.float32))}
+
+    trainer = Trainer(step, params, opt.init(params), lm_batch_at,
+                      os.path.join(args.ckpt, "target"),
+                      TrainerConfig(num_steps=args.pretrain_steps,
+                                    ckpt_every=100, log_every=25,
+                                    metrics_path=os.path.join(
+                                        args.ckpt, "target_metrics.jsonl")))
+    trainer.restore_if_available()
+    last = trainer.run()
+    print(f"   target loss: {last.get('loss', float('nan')):.4f}")
+    target = trainer.params
+
+    # ---- stage 2: MemCom Phase-1 (frozen target) ---------------------
+    phase = 2 if args.phase2 else 1
+    print(f"== stage 2: MemCom Phase-{phase} compressor "
+          f"({args.memcom_steps} steps, target frozen)")
+    mc = memcom.init_memcom(cfg, target, 1)
+    mask = memcom.trainable_mask(mc, phase)
+    mopt = AdamW(lr=warmup_constant(2e-3 if phase == 1 else 2e-4, 20),
+                 mask=mask)
+
+    def mc_loss(c, batch):
+        c = jax.tree.map(
+            lambda x, m: x if m else jax.lax.stop_gradient(x), c, mask)
+        return memcom.memcom_loss(c, target, cfg, batch)
+
+    mc_step = jax.jit(build_train_step(mc_loss, mopt))
+
+    def mc_batch_at(i):
+        b = stream.batch_at(1000 + i)
+        return {k: jnp.asarray(b[k]) for k in
+                ("source", "target", "target_mask")}
+
+    mtrainer = Trainer(mc_step, mc, mopt.init(mc), mc_batch_at,
+                       os.path.join(args.ckpt, f"memcom_p{phase}"),
+                       TrainerConfig(num_steps=args.memcom_steps,
+                                     ckpt_every=100, log_every=25,
+                                     metrics_path=os.path.join(
+                                         args.ckpt, "memcom_metrics.jsonl")))
+    mtrainer.restore_if_available()
+    last = mtrainer.run()
+    print(f"   memcom loss: {last.get('loss', float('nan')):.4f}")
+    print(f"checkpoints + metrics under {args.ckpt}/")
+
+
+if __name__ == "__main__":
+    main()

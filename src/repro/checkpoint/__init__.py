@@ -1,0 +1,4 @@
+from repro.checkpoint.store import save_tree, load_tree
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_tree", "load_tree", "CheckpointManager"]

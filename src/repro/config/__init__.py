@@ -1,0 +1,25 @@
+from repro.config.base import (
+    LayerDesc,
+    LayerLayout,
+    MoEConfig,
+    MambaConfig,
+    MLAConfig,
+    EncoderConfig,
+    MemComConfig,
+    ModelConfig,
+    ShapeSpec,
+    SHAPES,
+)
+
+__all__ = [
+    "LayerDesc",
+    "LayerLayout",
+    "MoEConfig",
+    "MambaConfig",
+    "MLAConfig",
+    "EncoderConfig",
+    "MemComConfig",
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+]

@@ -1,0 +1,33 @@
+# The paper's primary contribution: MemCom layer-wise many-shot compression.
+from repro.core.memcom import (
+    init_memcom,
+    init_memx,
+    compress,
+    memcom_loss,
+    next_token_loss,
+    trainable_mask,
+    build_prefix,
+)
+from repro.core.icae import (
+    init_icae,
+    icae_compress,
+    icae_loss,
+    icae_trainable_mask,
+)
+from repro.core.lora import merge_lora, init_lora
+
+__all__ = [
+    "init_memcom",
+    "init_memx",
+    "compress",
+    "memcom_loss",
+    "next_token_loss",
+    "trainable_mask",
+    "build_prefix",
+    "init_icae",
+    "icae_compress",
+    "icae_loss",
+    "icae_trainable_mask",
+    "merge_lora",
+    "init_lora",
+]

@@ -1,0 +1,99 @@
+"""ICAE / ICAE+ / ICAE++ baselines (paper §5.1, Fig. 3, Table 4).
+
+One compressor LLM (a copy of the target): the source sequence is appended
+with m learnable memory embeddings, one full forward pass is taken, and the
+final-layer memory outputs become m soft tokens *prepended to the target's
+input* — i.e. coarse final-layer compression, against which MemCom's
+layer-wise compression is compared.
+
+Variants (increasing compressor capacity):
+  icae    — LoRA(r=32) on W_q, W_k            (original paper setup)
+  icae+   — LoRA(r=32) on W_q, W_k, W_v, W_o
+  icae++  — full attention modules trainable
+
+Trained with next-token loss only (the AE loss destabilizes training —
+paper App. A.2), matching MemCom's objective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.lora import init_lora, merge_lora
+from repro.core.memcom import next_token_loss
+from repro.models import transformer as tfm
+from repro.utils.pytree import tree_map_with_path
+from repro.utils.rng import Keys
+
+VARIANTS = {
+    "icae": ("wq", "wk"),
+    "icae+": ("wq", "wk", "wv", "wo"),
+    "icae++": (),  # full attention trainable, no LoRA
+}
+
+
+def init_icae(cfg: ModelConfig, target_params, variant: str = "icae++",
+              seed: int | Keys = 0, abstract: bool = False):
+    assert variant in VARIANTS, variant
+    assert cfg.memcom is not None, "memcom config carries num_memory_tokens"
+    keys = seed if isinstance(seed, Keys) else Keys(seed)
+    m = cfg.memcom.num_memory_tokens
+    if abstract:
+        copy = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        mem = jax.ShapeDtypeStruct((m, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        copy = lambda t: jax.tree.map(jnp.array, t)
+        mem = (cfg.d_model**-0.5 * jax.random.normal(
+            keys("mem_embed"), (m, cfg.d_model), jnp.float32)
+        ).astype(jnp.dtype(cfg.dtype))
+    targets = VARIANTS[variant]
+    lora = (init_lora(target_params, targets, rank=32, seed=keys.child("lora"),
+                      abstract=abstract) if targets else {})
+    # NB: the variant is *not* stored in the tree (strings aren't jit-able
+    # leaves); callers thread it explicitly.
+    return {"compressor": copy(target_params), "lora": lora, "mem_embed": mem}
+
+
+def icae_compress(ic_params, cfg: ModelConfig, source_tokens, *,
+                  remat: bool = False, impl: str = "auto"):
+    """(B, T) source tokens -> (B, m, D) soft memory tokens."""
+    B, T = source_tokens.shape
+    m = cfg.memcom.num_memory_tokens
+    comp = ic_params["compressor"]
+    if ic_params["lora"]:
+        comp = merge_lora(comp, ic_params["lora"])
+    src_emb = jnp.take(comp["embed"]["tokens"], source_tokens, axis=0)
+    mem_emb = jnp.broadcast_to(ic_params["mem_embed"][None],
+                               (B, m, cfg.d_model)).astype(src_emb.dtype)
+    embeds = jnp.concatenate([src_emb, mem_emb], axis=1)
+    hidden, _ = tfm.forward(comp, cfg, embeds=embeds, logits=False,
+                            remat=remat, impl=impl)
+    return hidden[:, T:, :]
+
+
+def icae_loss(ic_params, target_params, cfg: ModelConfig, batch, *,
+              remat: bool = False, impl: str = "auto"):
+    """Soft memory prepended to target input; CE on target tokens."""
+    soft = icae_compress(ic_params, cfg, batch["source"], remat=remat, impl=impl)
+    tgt = batch["target"]
+    m = soft.shape[1]
+    tgt_emb = jnp.take(target_params["embed"]["tokens"], tgt, axis=0)
+    embeds = jnp.concatenate([soft.astype(tgt_emb.dtype), tgt_emb], axis=1)
+    logits, aux = tfm.forward(target_params, cfg, embeds=embeds,
+                              remat=remat, impl=impl)
+    loss = next_token_loss(logits[:, m:], tgt, batch.get("target_mask"))
+    return loss + aux["moe_loss"], {"ce": loss, "moe": aux["moe_loss"]}
+
+
+def icae_trainable_mask(ic_params, variant: str):
+    def mark(path, _):
+        if path.startswith("lora") or path.startswith("mem_embed"):
+            return True
+        if variant == "icae++" and path.startswith("compressor") and "/attn/" in path:
+            return True
+        return False
+
+    return tree_map_with_path(mark, ic_params)

@@ -1,0 +1,67 @@
+"""LoRA adapters for the ICAE compressor family (paper §5.1, Fig. 3a).
+
+The adapter tree sparsely mirrors the model parameter tree; each adapted
+kernel ``w`` gets ``{"a": (in, r), "b": (r, out)}`` and the effective
+weight is ``w + (alpha/r) * a @ b``, materialized in-graph before the
+forward pass (one rank-r matmul per adapted kernel — negligible next to
+the model itself, and it keeps the model code adapter-agnostic).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.rng import Keys
+
+
+def init_lora(params, targets: Sequence[str], rank: int = 32,
+              seed: int | Keys = 0, abstract: bool = False):
+    """Build an adapter tree for every leaf whose name is in ``targets``
+    (e.g. ("wq", "wk")) under an ``attn`` scope."""
+    keys = seed if isinstance(seed, Keys) else Keys(seed)
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return None
+        out = {}
+        for name, child in node.items():
+            if isinstance(child, dict):
+                sub = walk(child, path + (name,))
+                if sub:
+                    out[name] = sub
+            elif name in targets and "attn" in path and child.ndim >= 2:
+                d_in, d_out = child.shape[-2], child.shape[-1]
+                stack = child.shape[:-2]
+                if abstract:
+                    a = jax.ShapeDtypeStruct(stack + (d_in, rank), child.dtype)
+                    bm = jax.ShapeDtypeStruct(stack + (rank, d_out), child.dtype)
+                else:
+                    k = keys("/".join(path + (name,)))
+                    a = (d_in**-0.5 * jax.random.normal(
+                        k, stack + (d_in, rank), jnp.float32)).astype(child.dtype)
+                    bm = jnp.zeros(stack + (rank, d_out), child.dtype)
+                out[name] = {"a": a, "b": bm}
+        return out
+
+    return walk(params, ()) or {}
+
+
+def merge_lora(params, lora, alpha: float = 16.0, rank: int = 32):
+    """Return params with LoRA deltas folded in (non-destructive)."""
+    scale = alpha / rank
+
+    def walk(p, l):
+        if l is None:
+            return p
+        out = dict(p)
+        for name, entry in l.items():
+            if set(entry.keys()) == {"a", "b"}:
+                out[name] = p[name] + scale * (entry["a"] @ entry["b"]).astype(p[name].dtype)
+            else:
+                out[name] = walk(p[name], entry)
+        return out
+
+    return walk(params, lora)

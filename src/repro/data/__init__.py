@@ -1,0 +1,15 @@
+from repro.data.synthetic import SyntheticVocab, PretrainStream
+from repro.data.icl_tasks import (ICLTaskSpec, make_episode, make_query,
+                                  build_manyshot_prompt, eval_accuracy)
+from repro.data.pipeline import Prefetcher
+
+__all__ = [
+    "SyntheticVocab",
+    "PretrainStream",
+    "ICLTaskSpec",
+    "make_episode",
+    "make_query",
+    "build_manyshot_prompt",
+    "eval_accuracy",
+    "Prefetcher",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three implementations with one contract:
+``ref.py`` (pure-jnp oracle, ground truth for tests), ``jnp_impl.py``
+(streaming CPU/production-fallback paths), and the Pallas kernel module
+(``pl.pallas_call`` + explicit BlockSpec VMEM tiling, validated in
+interpret mode on CPU).  ``ops.py`` is the dispatch layer
+(``impl="auto"`` → pallas on TPU, jnp elsewhere, dense for tiny shapes).
+
+Kernels: flash_attention (GQA, position-masked, causal block-skip),
+memcom_xattn (the paper's 1-head m×t compression cross-attention),
+moe_gmm (per-expert grouped matmul), ssd_scan (Mamba2 chunked SSD).
+"""

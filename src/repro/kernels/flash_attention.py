@@ -1,0 +1,184 @@
+"""Flash attention Pallas TPU kernel (GQA, position-masked, online softmax).
+
+The one kernel behind every attention call in the framework: causal
+self-attention (train/prefill), prefix attention (MemCom memory slots),
+decode (1 query row against a long cache), and enc-dec cross attention —
+all expressed through the (q_pos, kv_pos) contract of
+:func:`repro.kernels.ref.attention_ref`.
+
+TPU mapping
+-----------
+Grid ``(B, Hq, nq, nk)`` — the KV-block axis is innermost and
+``ARBITRARY`` (sequential) so the online-softmax state for one (batch,
+head, q-block) lives in VMEM scratch across its KV sweep; batch/head/
+q-block axes are ``PARALLEL``. Blocks:
+
+* q     (1, bq, 1, D)  — one head's q tile; D kept whole (128-aligned
+  head dims: 64/80/128 pad to lane width once, not per block).
+* k/v   (1, bk, 1, D)  — indexed by ``h // G`` (GQA: G q-heads share one
+  KV head, so consecutive q-heads reuse the same KV tile; with the head
+  axis PARALLEL adjacent programs hit VMEM-resident tiles).
+* positions (1, bq)/(1, bk) int32 — drive masking inside the kernel; the
+  causal test is ``kv_pos <= q_pos`` so decode, sliding windows, and
+  MemCom's "memory slots visible to everyone" all reduce to position
+  vectors, no mask tensors in HBM.
+
+Scratch: acc (bq, D) f32, running max m and sum l (bq, 1) f32
+=> VMEM footprint ≈ bq*D*4 + 2*(bq+bk)*D*2 bytes; defaults bq=bk=512,
+D=128 ≈ 1.3 MB — triple-buffered comfortably under the 16 MB/core budget.
+
+Block-level skip: a KV block whose minimum kv_pos exceeds the block's
+maximum q_pos contributes nothing under the causal mask — `pl.when`
+skips its matmuls (the flash causal ~2× FLOP saving, decided from the
+loaded position tiles, so it also fires for decode where q_pos is a
+cache offset, not a diagonal).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref,  # inputs
+    o_ref, lse_ref,  # outputs
+    acc, m_scr, l_scr,  # scratch
+    *, scale: float, causal: bool, softcap: float, block_k: int,
+):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q_pos = q_pos_ref[0]  # (bq,) int32
+    kv_pos = kv_pos_ref[0]  # (bk,) int32
+
+    def compute():
+        q = q_ref[0, :, 0, :]  # (bq, D)
+        k = k_ref[0, :, 0, :]  # (bk, D)
+        v = v_ref[0, :, 0, :]  # (bk, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        valid = (kv_pos >= 0)[None, :]
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        logits = jnp.where(valid, logits, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc[...] = acc[...] * corr + pv
+
+    if causal:
+        # skip blocks strictly above the causal frontier (padding slots
+        # carry kv_pos == -1 and never raise the block minimum)
+        kv_lo = jnp.where(kv_pos >= 0, kv_pos, jnp.int32(2**30)).min()
+        pl.when(kv_lo <= q_pos.max())(compute)
+    else:
+        compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        out = acc[...] / jnp.maximum(l, 1e-37)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        lse = jnp.where(
+            l > 0, m_scr[...] + jnp.log(jnp.maximum(l, 1e-37)), NEG_INF)
+        lse_ref[0, :, 0] = lse[:, 0]
+
+
+def _pad_to(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "softcap", "scale", "block_q", "block_k",
+                     "return_lse", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, q_pos, kv_pos, causal=True, softcap=0.0, scale=None,
+    block_q=512, block_k=512, return_lse=False, interpret=False,
+):
+    """(B,Sq,Hq,D) x (B,Skv,Hkv,D) -> (B,Sq,Hq,Dv) [, lse (B,Sq,Hq)]."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = D**-0.5
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+    qp = _pad_to(q, bq, axis=1)
+    kp = _pad_to(k, bk, axis=1)
+    vp = _pad_to(v, bk, axis=1)
+    # padded q rows: positions below every valid kv so causal masks all;
+    # padded kv slots: -1 marks invalid under both mask kinds
+    q_pos_p = _pad_to(q_pos.astype(jnp.int32), bq, axis=1, value=-(2**30))
+    kv_pos_p = _pad_to(kv_pos.astype(jnp.int32), bk, axis=1, value=-1)
+    Sqp, Skvp = qp.shape[1], kp.shape[1]
+    nq, nk = Sqp // bq, Skvp // bk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, softcap=softcap,
+        block_k=bk)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, Dv), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, Dv), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bq, 1), lambda b, h, iq, ik: (b, iq, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sqp, Hq, Dv), q.dtype),
+            jax.ShapeDtypeStruct((B, Sqp, Hq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.PARALLEL, pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(q_pos_p, kv_pos_p, qp, kp, vp)
+
+    out = out[:, :Sq]
+    if return_lse:
+        return out, lse[:, :Sq]
+    return out

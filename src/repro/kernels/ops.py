@@ -1,0 +1,198 @@
+"""Public kernel entry points with backend dispatch.
+
+Every op has three implementations:
+
+* ``dense``  — :mod:`repro.kernels.ref` oracle (tiny shapes, tests)
+* ``jnp``    — streaming :mod:`repro.kernels.jnp_impl` (CPU, dry-run lowering)
+* ``pallas`` — TPU kernels in this package (``interpret=True`` on CPU tests)
+
+``impl="auto"`` picks ``pallas`` on TPU backends and ``jnp`` elsewhere,
+falling back to ``dense`` for very small problems where blocking overhead
+dominates.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import jnp_impl, ref
+
+_FORCED_IMPL: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    """Force an implementation globally (None restores auto)."""
+    global _FORCED_IMPL
+    _FORCED_IMPL = impl
+
+
+def _resolve(impl: str, small: bool) -> str:
+    if impl != "auto":
+        return impl
+    if _FORCED_IMPL is not None:
+        return _FORCED_IMPL
+    if small:
+        return "dense"
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, *, q_pos, kv_pos, causal=True, softcap=0.0, scale=None,
+              impl="auto", kv_chunk=1024, return_lse=False):
+    """General position-masked GQA attention (prefix / decode / cross)."""
+    small = q.shape[1] * k.shape[1] <= 256 * 256
+    impl = _resolve(impl, small)
+    if impl == "dense":
+        out = ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                causal=causal, softcap=softcap, scale=scale)
+        if return_lse:
+            # dense path recomputes lse explicitly (tests only)
+            _, lse = jnp_impl.attention_chunked(
+                q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                softcap=softcap, scale=scale, kv_chunk=max(k.shape[1], 1),
+                return_lse=True)
+            return out, lse
+        return out
+    if impl == "pallas":
+        from repro.kernels import flash_attention  # lazy: TPU-targeted
+
+        return flash_attention.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+            softcap=softcap, scale=scale, return_lse=return_lse,
+            interpret=jax.default_backend() != "tpu")
+    return jnp_impl.attention_chunked(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, softcap=softcap,
+        scale=scale, kv_chunk=kv_chunk, return_lse=return_lse)
+
+
+def self_attention_causal(q, k, v, *, offset=0, softcap=0.0, scale=None,
+                          impl="auto", q_chunk=512, kv_chunk=512,
+                          return_lse=False):
+    """Pure causal self-attention (q_pos = kv_pos = offset + arange(S))."""
+    S = q.shape[1]
+    small = S * S <= 512 * 512
+    impl = _resolve(impl, small)
+    if impl == "dense":
+        B = q.shape[0]
+        pos = jnp.broadcast_to(offset + jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = ref.attention_ref(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                                softcap=softcap, scale=scale)
+        if return_lse:
+            _, lse = jnp_impl.attention_causal_blocked(
+                q, k, v, offset=offset, softcap=softcap, scale=scale,
+                q_chunk=min(q_chunk, S), kv_chunk=min(kv_chunk, S),
+                return_lse=True)
+            return out, lse
+        return out
+    if impl == "pallas":
+        from repro.kernels import flash_attention
+
+        B = q.shape[0]
+        pos = jnp.broadcast_to(offset + jnp.arange(S, dtype=jnp.int32), (B, S))
+        return flash_attention.flash_attention(
+            q, k, v, q_pos=pos, kv_pos=pos, causal=True, softcap=softcap,
+            scale=scale, return_lse=return_lse,
+            interpret=jax.default_backend() != "tpu")
+    return jnp_impl.attention_causal_blocked(
+        q, k, v, offset=offset, softcap=softcap, scale=scale,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, return_lse=return_lse)
+
+
+def attention_with_prefix(q, k_self, v_self, k_pre, v_pre, *, pre_pos=None,
+                          offset=None, softcap=0.0, scale=None, impl="auto"):
+    """Causal self-attention plus a fully-visible KV prefix (MemCom memory).
+
+    Computed as two FLOP-optimal partials merged exactly via log-sum-exp —
+    the flash-decoding decomposition.  ``offset`` defaults to the prefix
+    length (target tokens sit after the memory slots in RoPE space).
+    """
+    m = k_pre.shape[1]
+    B = q.shape[0]
+    if offset is None:
+        offset = m
+    if pre_pos is None:
+        pre_pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (B, m))
+    o_self, l_self = self_attention_causal(
+        q, k_self, v_self, offset=offset, softcap=softcap, scale=scale,
+        impl=impl, return_lse=True)
+    q_pos = jnp.broadcast_to(
+        offset + jnp.arange(q.shape[1], dtype=jnp.int32), (B, q.shape[1]))
+    o_pre, l_pre = attention(
+        q, k_pre, v_pre, q_pos=q_pos, kv_pos=pre_pos, causal=False,
+        softcap=softcap, scale=scale, impl=impl, return_lse=True)
+    return jnp_impl.combine_attention_partials([(o_self, l_self), (o_pre, l_pre)])
+
+
+# ---------------------------------------------------------------------------
+# MemCom layer-wise cross-attention (the paper's compressor hot spot)
+# ---------------------------------------------------------------------------
+
+
+def memcom_xattn(q, k, v, *, scale=None, impl="auto"):
+    """1-head cross-attention, head width = d_model: (B,M,D)x(B,T,D)->(B,M,D)."""
+    small = q.shape[1] * k.shape[1] <= 256 * 256
+    impl = _resolve(impl, small)
+    if impl == "dense":
+        return ref.memcom_xattn_ref(q, k, v, scale=scale)
+    if impl == "pallas":
+        from repro.kernels import memcom_xattn as kx
+
+        return kx.memcom_xattn(q, k, v, scale=scale,
+                               interpret=jax.default_backend() != "tpu")
+    # jnp streaming: reuse chunked attention with a single head
+    B, M, D = q.shape
+    T = k.shape[1]
+    qh = q[:, :, None, :]
+    kh = k[:, :, None, :]
+    vh = v[:, :, None, :]
+    q_pos = jnp.zeros((B, M), jnp.int32)
+    kv_pos = jnp.zeros((B, T), jnp.int32)
+    out = jnp_impl.attention_chunked(
+        qh, kh, vh, q_pos=q_pos, kv_pos=kv_pos, causal=False, scale=scale,
+        kv_chunk=1024)
+    return out[:, :, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# Grouped matmul (MoE expert compute)
+# ---------------------------------------------------------------------------
+
+
+def gmm(x, w, *, impl="auto"):
+    """(E,C,D) x (E,D,F) -> (E,C,F) per-expert matmul."""
+    small = x.shape[0] * x.shape[1] * x.shape[2] <= 64 * 64 * 64
+    impl = _resolve(impl, small)
+    if impl == "pallas":
+        from repro.kernels import moe_gmm
+
+        return moe_gmm.gmm(x, w, interpret=jax.default_backend() != "tpu")
+    return ref.gmm_ref(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd(x, dt, A, Bm, Cm, *, init_state=None, chunk=256, impl="auto"):
+    small = x.shape[1] <= 64
+    impl = _resolve(impl, small)
+    if impl == "dense":
+        return ref.ssd_ref(x, dt, A, Bm, Cm, init_state=init_state)
+    if impl == "pallas":
+        from repro.kernels import ssd_scan
+
+        return ssd_scan.ssd(x, dt, A, Bm, Cm, init_state=init_state,
+                            chunk=chunk, interpret=jax.default_backend() != "tpu")
+    return jnp_impl.ssd_chunked(x, dt, A, Bm, Cm, init_state=init_state, chunk=chunk)
+
+
+ssd_decode_step = jnp_impl.ssd_decode_step

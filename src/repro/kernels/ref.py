@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth used by tests (``assert_allclose`` against both
+the streaming jnp implementations and the Pallas kernels in interpret mode)
+and by tiny-shape paths where blocking overhead is not worth it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    k: jax.Array,  # (B, Skv, Hkv, Dk)
+    v: jax.Array,  # (B, Skv, Hkv, Dv)
+    *,
+    q_pos: jax.Array,  # (B, Sq) int32
+    kv_pos: jax.Array,  # (B, Skv) int32; -1 marks invalid slots
+    causal: bool = True,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    """Dense reference attention with GQA and position-derived masking."""
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    if scale is None:
+        scale = Dk**-0.5
+    qh = q.reshape(B, Sq, Hkv, G, Dk)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qh, k).astype(jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = kv_pos[:, None, :] >= 0  # (B, 1, Skv)
+    if causal:
+        valid = valid & (kv_pos[:, None, :] <= q_pos[:, :, None])  # (B, Sq, Skv)
+    else:
+        valid = jnp.broadcast_to(valid, (B, Sq, Skv))
+    logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows -> zeros (softmax of -1e30 rows is uniform; re-mask)
+    any_valid = jnp.any(valid, axis=-1)[:, None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, v.shape[-1])
+
+
+def memcom_xattn_ref(
+    q: jax.Array,  # (B, M, D)   memory-token queries (single head of width D)
+    k: jax.Array,  # (B, T, D)   source reps
+    v: jax.Array,  # (B, T, D)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """The paper's 1-head cross-attention: m memory queries over t source
+    tokens, head width = d_model, no mask."""
+    D = q.shape[-1]
+    if scale is None:
+        scale = D**-0.5
+    logits = jnp.einsum("bmd,btd->bmt", q, k).astype(jnp.float32) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bmt,btd->bmd", p.astype(v.dtype), v)
+
+
+def gmm_ref(
+    x: jax.Array,  # (E, C, D) expert input buffers
+    w: jax.Array,  # (E, D, F)
+) -> jax.Array:
+    """Grouped (per-expert) matmul oracle: (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x, w)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)   inputs per head
+    dt: jax.Array,  # (B, S, H)     discretization steps (post-softplus)
+    A: jax.Array,  # (H,)           negative decay rates
+    Bm: jax.Array,  # (B, S, G, N)  input matrices (groups broadcast to heads)
+    Cm: jax.Array,  # (B, S, G, N)
+    *,
+    init_state: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential state-space-duality oracle.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B_, S, H, P = x.shape
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        dA = jnp.exp(dtt * A[None, :])  # (B,H)
+        h = h * dA[..., None, None] + (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    return y.astype(x.dtype), final

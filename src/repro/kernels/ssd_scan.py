@@ -1,0 +1,138 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+Computes, per head, the SSD recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T;   y_t = C_t . h_t
+
+in chunk-parallel form: within a chunk of Q tokens the contribution is a
+masked quadratic form (three MXU matmuls), between chunks a (P × N)
+state carries the recurrence. This is the TPU-native phrasing of the
+paper's SSD duality — the quadratic intra-chunk term *is* an attention-
+like matmul and keeps the MXU busy, while the O(S) sequential part runs
+once per chunk instead of once per token.
+
+Grid ``(B, H, nc)`` — the chunk axis innermost/sequential with the
+(P, N) state in f32 VMEM scratch; batch and head axes parallel. Blocks:
+x (Q, P), dt (Q,), B/C (Q, N) (GQA-style groups resolved by ``h // rep``
+in the index map), y (Q, P); A enters as a per-head scalar block.
+
+Per chunk (all f32 in-kernel):
+    a     = dt * A                     (Q,)   log-decay steps
+    cum   = cumsum(a)                  (Q,)   inclusive
+    L     = tril(exp(cum_i - cum_j))   (Q, Q) decay kernel
+    w     = (C B^T) * L * dt_j         (Q, Q)
+    y     = w @ x + (C * exp(cum)) @ state^T          intra + carry-in
+    state = state * exp(cum_Q) + x^T @ (exp(cum_Q - cum) * dt * B)
+
+VMEM: state P×N f32 (64×128 → 32 KB) + chunk tiles; Q=256, P=64, N=128
+→ ~0.6 MB. The (Q, Q) decay kernel lives in registers/VMEM transiently.
+
+Padding: S is padded to a chunk multiple with dt = 0 — exp(0·A) = 1 and
+the input term carries dt as a factor, so padded steps are exact no-ops
+on the state and the padded y rows are sliced off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hf_ref, state, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = h0_ref[0, 0].astype(jnp.float32)  # (P, N)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0].astype(jnp.float32)  # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # (Q, N)
+
+    a = dt * A  # (Q,)
+    cum = jnp.cumsum(a)  # (Q,)
+    # intra-chunk decay kernel: L_ij = exp(cum_i - cum_j) for j <= i
+    decay = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(jj <= ii, jnp.exp(decay), 0.0)
+
+    gcb = jax.lax.dot_general(  # (Q, Q) = C . B^T
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    w = gcb * L * dt[None, :]
+    y = jax.lax.dot_general(  # (Q, P) intra-chunk
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # carry-in: y += (C * exp(cum)) @ state^T  — (Q,N)·(N,P)
+    y = y + jax.lax.dot_general(
+        Cm * jnp.exp(cum)[:, None], state[...],
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state * exp(cum_Q) + x^T @ (exp(cum_Q - cum) * dt * B)
+    seg = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    state[...] = state[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x, seg[:, None] * Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        hf_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, init_state=None, chunk=256, interpret=False):
+    """Same contract as :func:`repro.kernels.ref.ssd_ref`.
+
+    x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N) →
+    (y (B,S,H,P), final_state (B,H,P,N) f32).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, max(S, 8))
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0: exact no-op
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, ic: (b, ic, h)),
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, ic, rep=rep: (b, ic, h // rep, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, ic, rep=rep: (b, ic, h // rep, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, init_state)
+    return y[:, :S], hf

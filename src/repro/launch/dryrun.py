@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first jax init.
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) cell, builds the production mesh
+(single-pod 16×16 = 256 chips, or multi-pod 2×16×16 = 512), assembles the
+cell's step function and fully-abstract sharded inputs
+(:mod:`repro.launch.steps`), then::
+
+    lowered  = jax.jit(step, donate_argnums=…).lower(*args)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves it fits
+    print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+and records per-cell JSON artifacts (memory, XLA cost, collective-traffic
+estimates) that §Roofline (launch/roofline.py) consumes.
+
+Collective accounting: collectives inside a scanned layer stack appear
+ONCE in the HLO text. The driver therefore also compiles reduced-depth
+variants (repeats = 1, 2) and extrapolates per-layer traffic linearly to
+the real depth — slope × repeats + intercept (hlo_stats docstring).
+
+Usage::
+
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+
+import argparse
+import dataclasses
+import gc
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES, EncoderConfig, LayerLayout
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import costs
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, cell_is_skipped, default_objective
+from repro.sharding.ctx import act_sharding
+from repro.sharding.rules import FSDP_RULES
+
+ASSIGNED = tuple(a for a in ARCH_IDS if a not in ("gemma2-2b", "mistral-7b"))
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def _reduced(cfg, repeats: int):
+    """Same layer *period*, fewer scan trips (collective extrapolation)."""
+    lay = cfg.layout
+    kw = {}
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, num_layers=repeats)
+    return cfg.replace(
+        layout=LayerLayout(period=lay.period, repeats=repeats,
+                           prefix=lay.prefix), **kw)
+
+
+def lower_and_compile(arch: str, shape_name: str, mesh, *, objective=None,
+                      phase: int = 1, rules=None, impl: str = "auto",
+                      cfg_override=None, decode_window: int = 0,
+                      moe_groups: int = 0, act_seq: bool = True):
+    cell = build_cell(arch, shape_name, mesh, objective=objective,
+                      phase=phase, rules=rules, impl=impl,
+                      cfg_override=cfg_override, decode_window=decode_window,
+                      moe_groups=moe_groups)
+    act = cell["act_sharding"]
+    if not act_seq and act is not None:
+        # batch-only residual sharding (perf variant: no seq resharding)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        spec = act.spec
+        act = NamedSharding(act.mesh, P(spec[0], *([None] * (len(spec) - 1))))
+    jitted = jax.jit(cell["step"], donate_argnums=cell["donate"])
+    with act_sharding(act):
+        t0 = time.monotonic()
+        lowered = jitted.lower(*cell["args"])
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        t2 = time.monotonic()
+    return cell, lowered, compiled, {"lower_s": round(t1 - t0, 2),
+                                     "compile_s": round(t2 - t1, 2)}
+
+
+def _mem_dict(compiled) -> dict:
+    m = compiled.memory_analysis()
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, phase: int,
+             extrapolate: bool, out_dir: pathlib.Path, force: bool,
+             objective=None) -> dict:
+    tag = f"{arch}__{shape_name}__{_mesh_tag(multi_pod)}"
+    if objective:
+        tag += f"__{objective}"
+    path = out_dir / f"{tag}.json"
+    if path.exists() and not force:
+        rec = json.loads(path.read_text())
+        print(f"[skip existing] {tag}: {rec.get('status')}")
+        return rec
+
+    skip = cell_is_skipped(arch, shape_name)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "phase": phase,
+    }
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        path.write_text(json.dumps(rec, indent=1))
+        print(f"[SKIP] {tag}: {skip}")
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell, lowered, compiled, timing = lower_and_compile(
+            arch, shape_name, mesh, phase=phase, objective=objective)
+        rec["objective"] = cell["objective"]
+        rec["timing"] = timing
+        rec["memory"] = _mem_dict(compiled)
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float)) and
+                           k in ("flops", "bytes accessed", "optimal_seconds")}
+        text = compiled.as_text()
+        rec["collectives_full"] = collective_bytes(text)
+        rec["hlo_chars"] = len(text)
+        del compiled, lowered
+        gc.collect()
+
+        cfg = cell["cfg"]
+        if extrapolate and cfg.layout.repeats > 2:
+            per_r = {}
+            for r in (1, 2):
+                _, _, comp_r, _ = lower_and_compile(
+                    arch, shape_name, mesh, phase=phase,
+                    objective=objective, cfg_override=_reduced(cfg, r))
+                per_r[r] = collective_bytes(comp_r.as_text())
+                del comp_r
+                gc.collect()
+            slope = per_r[2]["total"] - per_r[1]["total"]
+            intercept = per_r[1]["total"] - slope
+            total = max(intercept, 0.0) + max(slope, 0.0) * cfg.layout.repeats
+            # extrapolation can only add to what the full text shows
+            total = max(total, rec["collectives_full"]["total"])
+            rec["collectives"] = {
+                "per_layer_period": slope,
+                "outside_scan": max(intercept, 0.0),
+                "total": total,
+                "method": "repeats-1/2 linear extrapolation",
+                "r1": per_r[1]["total"], "r2": per_r[2]["total"],
+            }
+        else:
+            rec["collectives"] = {
+                "total": rec["collectives_full"]["total"],
+                "method": "direct (unscanned or shallow)",
+            }
+
+        # analytic FLOP/byte model (primary for §Roofline; scan-aware)
+        shape = cell["shape"]
+        obj = cell["objective"]
+        cost_kind = {"memcom_train": "memcom_train", "lm_train": "lm_train",
+                     "compress": "prefill", "prefill": "prefill",
+                     "decode": "decode", "decode_compressed": "decode"}[obj]
+        cc = costs.cell_cost(cfg, shape, cost_kind)
+        rec["analytic"] = {
+            "flops": cc.flops, "hbm_bytes": cc.hbm_bytes,
+            "model_flops": cc.model_flops,
+        }
+        rec["status"] = "ok"
+        print(f"[OK]  {tag} obj={rec['objective']} "
+              f"compile={timing['compile_s']}s "
+              f"coll={rec['collectives']['total']/1e9:.3f} GB/dev")
+    except Exception as e:  # noqa: BLE001 — sweep must survive cell failures
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERR] {tag}: {rec['error']}")
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--objective", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--phase", type=int, default=1)
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    n_ok = n_err = n_skip = 0
+    for multi_pod in meshes:
+        for arch, shape_name in cells:
+            rec = run_cell(
+                arch, shape_name, multi_pod=multi_pod, phase=args.phase,
+                extrapolate=not args.no_extrapolate and not multi_pod,
+                out_dir=out_dir, force=args.force, objective=args.objective)
+            s = rec.get("status")
+            n_ok += s == "ok"
+            n_err += s == "error"
+            n_skip += s == "skipped"
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped (spec), {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Collective-traffic extraction from partitioned HLO text.
+
+``collective_bytes`` parses ``compiled.as_text()`` (the per-partition SPMD
+module) and estimates per-device link traffic per op type:
+
+    all-gather         ≈ result_bytes          (receive everyone's shards)
+    all-reduce         ≈ 2 × result_bytes      (ring: reduce-scatter + gather)
+    reduce-scatter     ≈ result_bytes × group  (operand volume streamed)
+    all-to-all         ≈ result_bytes
+    collective-permute ≈ result_bytes
+
+Collectives inside while loops appear once in the text; the dry-run
+therefore measures two *unrolled* reduced-depth variants (repeats = 1, 2)
+and extrapolates linearly to the real depth (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> float:
+    n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device link traffic estimate, keyed by op type (+ 'total')."""
+    out: dict = defaultdict(float)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        dtype, dims, op = m.groups()
+        size = _bytes_of(dtype, dims)
+        group = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            group = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_V2_RE.search(line)
+            if g2:
+                group = int(g2.group(2))
+        if op == "all-gather":
+            traffic = size
+        elif op == "all-reduce":
+            traffic = 2.0 * size
+        elif op == "reduce-scatter":
+            traffic = size * group
+        else:  # all-to-all, collective-permute
+            traffic = size
+        out[op] += traffic
+        counts[op] += 1
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    out["counts"] = dict(counts)
+    return dict(out)

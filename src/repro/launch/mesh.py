@@ -1,0 +1,31 @@
+"""Production mesh factory.
+
+Single pod: 16×16 = 256 chips (data, model).
+Multi-pod:  2×16×16 = 512 chips (pod, data, model) — the "pod" axis is
+data-parallel by default and becomes the pipeline axis when pipeline
+parallelism is enabled.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (device count is locked at first jax init, so the
+dry-run driver must set XLA_FLAGS before any jax import — see dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1, data: int | None = None):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

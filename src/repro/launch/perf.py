@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (see dryrun.py).
+"""Perf hillclimb driver (§Perf): lower+compile named variants of a cell
+and record the three roofline terms per variant, so each
+hypothesis → change → measure → validate cycle is one CLI invocation.
+
+    python -m repro.launch.perf --cell jamba_train --variant baseline
+    python -m repro.launch.perf --cell jamba_train --variant moe_grouped
+
+Variants are explicit, named configurations (not flags scattered over
+runs) so EXPERIMENTS.md §Perf can point at exactly what changed.
+"""
+
+import argparse
+import dataclasses
+import gc
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.config import LayerLayout
+from repro.launch import costs
+from repro.launch.dryrun import _mem_dict, _reduced, lower_and_compile
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import BASELINE_RULES, FSDP_RULES
+
+CHIPS = 256
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+# --- the three hillclimb cells and their variants --------------------------
+# each variant: kwargs for lower_and_compile (+ optional cost override)
+
+CELLS = {
+    # 1. most collective-bound + worst-fitting: MoE-hybrid 398B training
+    "jamba_train": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        variants={
+            # pre-fix posture (what the baseline sweep measured):
+            # expert weights FSDP-sharded on d_model, global-sort dispatch
+            "baseline": dict(rules_name="fsdp_ep_embed"),
+            # H1 (REFUTED): group-local sort alone — the token stream was
+            # already scrambled across (data, model) by the residual
+            # sharding, so grouping didn't localize anything
+            "moe_grouped": dict(rules_name="fsdp_ep_embed", moe_groups=16),
+            # H2 (REFUTED): batch-only residual sharding — −6 % only;
+            # the dominant term was the expert-matmul partial sums
+            "moe_grouped_bs": dict(rules_name="fsdp_ep_embed",
+                                   moe_groups=16, act_seq=False),
+            # H3: EP-only expert weights + explicit batch-local token
+            # reshard inside the MoE layer (ctx.moe_dispatch_plan) —
+            # the shipped default
+            "moe_ep_local": {},
+        }),
+    # 2. the paper's own workload: compression (prefill) at 32k
+    "deepseek_compress": dict(
+        arch="deepseek-v2-236b", shape="prefill_32k",
+        variants={
+            "baseline": dict(rules_name="fsdp_ep_embed"),
+            "moe_ep_local": {},
+        }),
+    # 3. memory-bound serving: 32k decode — the cost MemCom removes
+    "nemo_decode": dict(
+        arch="mistral-nemo-12b", shape="decode_32k",
+        variants={
+            "baseline": {},
+            # the paper's technique as deployed: m-slot compressed cache
+            "compressed_cache": dict(objective="decode_compressed",
+                                     decode_window=256),
+            # H: after the cache shrink the collective term (weight
+            # all-gathers from ZeRO-3) dominates — serve TP-resident
+            # (BASELINE_RULES keeps weights sharded only on "model",
+            # resident across steps: 24 GB/16 = 1.5 GB/chip fits)
+            "baseline_tp": dict(rules_name="baseline"),
+            "compressed_tp": dict(objective="decode_compressed",
+                                  decode_window=256,
+                                  rules_name="baseline"),
+        }),
+}
+
+from repro.sharding.rules import FSDP_EP_EMBED_RULES  # noqa: E402
+
+RULES = {"fsdp": FSDP_RULES, "baseline": BASELINE_RULES,
+         "fsdp_ep_embed": FSDP_EP_EMBED_RULES}
+
+
+def measure(arch, shape_name, *, extrapolate=True, **kw):
+    if "rules_name" in kw:
+        kw["rules"] = RULES[kw.pop("rules_name")]
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.monotonic()
+    cell, lowered, compiled, timing = lower_and_compile(
+        arch, shape_name, mesh, **kw)
+    rec = {
+        "memory": _mem_dict(compiled),
+        "collectives_full": collective_bytes(compiled.as_text()),
+        "xla_cost": {k: float(v)
+                     for k, v in (compiled.cost_analysis() or {}).items()
+                     if isinstance(v, (int, float))
+                     and k in ("flops", "bytes accessed")},
+        "compile_s": round(time.monotonic() - t0, 1),
+    }
+    cfg = cell["cfg"]
+    if extrapolate and cfg.layout.repeats > 2:
+        per_r = {}
+        for r in (1, 2):
+            kw2 = dict(kw)
+            kw2["cfg_override"] = _reduced(cfg, r)
+            _, _, comp_r, _ = lower_and_compile(arch, shape_name, mesh, **kw2)
+            per_r[r] = collective_bytes(comp_r.as_text())["total"]
+            del comp_r
+            gc.collect()
+        slope = per_r[2] - per_r[1]
+        total = (max(per_r[1] - slope, 0.0)
+                 + max(slope, 0.0) * cfg.layout.repeats)
+        rec["collectives"] = {
+            "total": max(total, rec["collectives_full"]["total"]),
+            "per_layer_period": slope,
+            "method": "repeats-1/2 extrapolation",
+        }
+    else:
+        rec["collectives"] = {"total": rec["collectives_full"]["total"],
+                              "method": "direct"}
+
+    obj = cell["objective"]
+    cost_kind = {"memcom_train": "memcom_train", "lm_train": "lm_train",
+                 "compress": "prefill", "prefill": "prefill",
+                 "decode": "decode", "decode_compressed": "decode"}[obj]
+    shape = cell["shape"]
+    if obj == "decode_compressed":
+        # analytic decode cost with the compressed cache length
+        L = cfg.memcom.num_memory_tokens + kw.get("decode_window", 256)
+        shape = dataclasses.replace(shape, seq_len=L)
+    cc = costs.cell_cost(cfg, shape, cost_kind)
+    rec["analytic"] = {"flops": cc.flops, "hbm_bytes": cc.hbm_bytes,
+                       "model_flops": cc.model_flops}
+    rec["terms"] = {
+        "compute_s": cc.flops / (CHIPS * PEAK_FLOPS),
+        "memory_s": cc.hbm_bytes / (CHIPS * HBM_BW),
+        "collective_s": rec["collectives"]["total"] / LINK_BW,
+    }
+    rec["objective"] = obj
+    del compiled, lowered
+    gc.collect()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(CELLS), required=True)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    spec = CELLS[args.cell]
+    variants = ([args.variant] if args.variant
+                else list(spec["variants"]))
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for name in variants:
+        kw = dict(spec["variants"][name])
+        path = out_dir / f"{args.cell}__{name}.json"
+        if path.exists():
+            print(f"[skip existing] {path.name}")
+            continue
+        print(f"== {args.cell} / {name} …", flush=True)
+        try:
+            rec = measure(spec["arch"], spec["shape"],
+                          extrapolate=not args.no_extrapolate, **kw)
+            rec.update(cell=args.cell, variant=name, arch=spec["arch"],
+                       shape=spec["shape"])
+            path.write_text(json.dumps(rec, indent=1))
+            t = rec["terms"]
+            print(f"   compute {t['compute_s']*1e3:.1f}ms | "
+                  f"memory {t['memory_s']*1e3:.1f}ms | "
+                  f"collective {t['collective_s']*1e3:.1f}ms | "
+                  f"temp/dev {rec['memory'].get('temp_size_in_bytes', 0)/1e9:.1f}GB")
+        except Exception as e:  # noqa: BLE001
+            print(f"   ERROR: {type(e).__name__}: {e}")
+            path.write_text(json.dumps(
+                {"cell": args.cell, "variant": name, "status": "error",
+                 "error": str(e)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

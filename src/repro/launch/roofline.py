@@ -1,0 +1,130 @@
+"""Roofline analysis (deliverable g): three-term roofline per
+(arch × shape) from the dry-run artifacts.
+
+    compute    = FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HBM bytes / (chips × 819 GB/s)
+    collective = per-device link bytes / 50 GB/s  (ICI, per link)
+
+FLOPs/HBM come from the analytic cost model (launch/costs.py — XLA's
+``cost_analysis`` counts a scanned layer body once, so the compiled
+number undercounts by ~num_layers; both are recorded).  Collective bytes
+come from the compiled SPMD module text with repeats-1/2 linear
+extrapolation through the scan (launch/hlo_stats.py).
+
+Emits the §Roofline markdown table:
+
+    python -m repro.launch.roofline [--dir artifacts/dryrun] [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+CHIPS = 256  # single-pod roofline (16×16), per the assignment
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+NOTES = {
+    "compute": ("compute-bound: raise per-chip math utilization "
+                "(larger per-chip tiles, fewer pad/replica FLOPs)"),
+    "memory": ("HBM-bound: cut bytes/step (compressed/smaller KV cache, "
+               "fused reads, lower-precision cache)"),
+    "collective": ("collective-bound: reshard to remove per-layer "
+                   "gathers (group-local MoE dispatch, head-sharded "
+                   "attention, batch-only activations)"),
+}
+
+
+def analyze(rec: dict) -> dict:
+    a = rec["analytic"]
+    coll = rec.get("collectives", {}).get("total",
+                                          rec["collectives_full"]["total"])
+    t_comp = a["flops"] / (CHIPS * PEAK_FLOPS)
+    t_mem = a["hbm_bytes"] / (CHIPS * HBM_BW)
+    t_coll = coll / LINK_BW  # already per-device traffic
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "objective": rec.get("objective"),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom,
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "model_flops": a["model_flops"],
+        "useful_ratio": a["model_flops"] / a["flops"] if a["flops"] else 0.0,
+        "xla_flops": rec.get("xla_cost", {}).get("flops"),
+        "note": NOTES[dom],
+        "peak_bytes_per_dev": rec.get("memory", {}).get(
+            "peak_memory_in_bytes"),
+        "temp_bytes_per_dev": rec.get("memory", {}).get(
+            "temp_size_in_bytes"),
+    }
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+
+    rows, skips, errs = [], [], []
+    for p in sorted(pathlib.Path(args.dir).glob(f"*__{args.mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "skipped":
+            skips.append((rec["arch"], rec["shape"], rec["reason"]))
+        elif rec.get("status") == "error":
+            errs.append((rec["arch"], rec["shape"], rec.get("error")))
+        else:
+            rows.append(analyze(rec))
+
+    lines = [
+        "| arch | shape | objective | compute | memory | collective |"
+        " dominant | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['objective']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2%} |")
+    if skips:
+        lines.append("")
+        lines.append("Skipped (per spec):")
+        for a, s, why in skips:
+            lines.append(f"* {a} × {s} — {why}")
+    if errs:
+        lines.append("")
+        for a, s, e in errs:
+            lines.append(f"* ERROR {a} × {s}: {e}")
+
+    out = "\n".join(lines)
+    print(out)
+    if args.md:
+        pathlib.Path(args.md).write_text(out + "\n")
+
+    # hillclimb candidates
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        collb = max(rows, key=lambda r: r["collective_s"])
+        print(f"\nworst roofline fraction: {worst['arch']} × {worst['shape']}"
+              f" ({worst['roofline_fraction']:.1%})")
+        print(f"most collective-bound:   {collb['arch']} × {collb['shape']}"
+              f" ({fmt_s(collb['collective_s'])})")
+
+
+if __name__ == "__main__":
+    main()

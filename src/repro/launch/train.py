@@ -1,0 +1,112 @@
+"""Production training launcher: mesh + sharded MemCom step + fault-
+tolerant Trainer.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 50 --data 2 --model 1
+
+On this container the mesh is host-device-sized (use --data/--model to
+shape it); on a real fleet the same entry point runs under
+``jax.distributed.initialize`` with the production 16×16 (or 2×16×16)
+mesh from launch/mesh.py — the step function, shardings, checkpointing
+and data pipeline are identical (the dry-run proves the production-mesh
+lowering; see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import memcom
+from repro.data import PretrainStream, SyntheticVocab
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (
+    act_sharding_for, build_memcom_train_step, memcom_shardings,
+    opt_shardings, param_shardings, _with_shardings,
+)
+from repro.models import transformer as tfm
+from repro.optim import AdamW
+from repro.sharding.ctx import act_sharding
+from repro.sharding.rules import batch_sharding
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--phase", type=int, default=1, choices=(1, 2))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data", type=int, default=None)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt", default="artifacts/launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    vocab = SyntheticVocab()
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch)).replace(vocab_size=vocab.size)
+    if cfg.memcom is None:
+        raise SystemExit(f"{args.arch}: MemCom inapplicable "
+                         "(attention-free) — use examples/train_memcom.py "
+                         "for plain LM training")
+
+    mesh = make_host_mesh(model=args.model, data=args.data)
+    print(f"mesh: {dict(mesh.shape)}, arch: {cfg.name} "
+          f"({cfg.param_count()/1e6:.1f}M params), phase {args.phase}")
+
+    step, _ = build_memcom_train_step(cfg, phase=args.phase, remat=False)
+    mc_sh, mc_abs = memcom_shardings(cfg, mesh)
+    tgt_sh, _ = param_shardings(cfg, mesh)
+    mask = memcom.trainable_mask(mc_abs, args.phase)
+    opt = AdamW(lr=0.0, mask=mask)
+    opt_abs = jax.eval_shape(opt.init, mc_abs)
+    opt_sh = opt_shardings(opt_abs, mc_sh, mesh)
+
+    # real (sharded) state
+    target = jax.device_put(tfm.init_params(cfg, 0), tgt_sh)
+    mc = jax.device_put(memcom.init_memcom(cfg, target, 1), mc_sh)
+    opt_state = jax.device_put(
+        AdamW(lr=0.0, mask=mask).init(mc), opt_sh)
+
+    bsh = batch_sharding(mesh, ndim=2)
+    act = act_sharding_for(mesh, cfg, args.batch, args.seq)
+    split = int(args.seq * 0.75)
+    stream = PretrainStream(vocab, batch=args.batch, seq_len=args.seq,
+                            split_choices=(split,), seed=0)
+
+    with act_sharding(act):
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+
+        def train_step(mc, opt_state, batch):
+            with act_sharding(act):
+                return jitted(mc, opt_state, target, batch)
+
+        def batch_at(i):
+            b = stream.batch_at(i)
+            return {k: jax.device_put(jnp.asarray(b[k]), bsh)
+                    for k in ("source", "target", "target_mask")}
+
+        trainer = Trainer(
+            train_step, mc, opt_state, batch_at, args.ckpt,
+            TrainerConfig(num_steps=args.steps, ckpt_every=args.ckpt_every,
+                          log_every=10,
+                          metrics_path=os.path.join(args.ckpt,
+                                                    "metrics.jsonl")))
+        resumed = trainer.restore_if_available()
+        if resumed:
+            print(f"resumed from step {resumed}")
+        last = trainer.run()
+    print(f"done: {last}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.models.transformer import init_params, forward, init_cache, param_specs
+from repro.models import layers, attention, moe, mamba2, mla
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "param_specs",
+    "layers",
+    "attention",
+    "moe",
+    "mamba2",
+    "mla",
+]

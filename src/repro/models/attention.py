@@ -1,0 +1,193 @@
+"""GQA attention block: train / prefill / decode / cross / MemCom-prefix.
+
+RoPE positions and mask order are deliberately decoupled: masking always
+follows sequential text order (``mask_offset + arange``) while RoPE may use
+M-RoPE 3-D position streams (Qwen2-VL).
+
+MemCom integration: ``prefix`` carries the layer's compressed memory
+representations, either as hidden states ``{"h": (B, m, D)}`` (training —
+K/V derived through this layer's frozen projections, differentiable into
+the compressor) or as a precomputed compressed KV cache
+``{"k": (B, m, Hkv, hd), "v": ...}`` (serving).  Target tokens sit at
+positions ``m..m+S`` and see every memory slot (positions ``0..m-1``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope
+from repro.models.param import ParamBuilder
+from repro.sharding.ctx import head_sharded
+
+
+def init_attention(b: ParamBuilder, cfg: ModelConfig, name: str = "attn",
+                   num_heads: int | None = None) -> None:
+    d, hd = cfg.d_model, cfg.hd
+    nh = num_heads or cfg.num_heads
+    nkv = num_heads or cfg.num_kv_heads
+    ab = b.child(name)
+    ab.make("wq", (d, nh * hd), ("embed", "heads"))
+    ab.make("wk", (d, nkv * hd), ("embed", "kv_heads"))
+    ab.make("wv", (d, nkv * hd), ("embed", "kv_heads"))
+    ab.make("wo", (nh * hd, d), ("heads", "embed"), fan_in=nh * hd)
+    if cfg.attn_qkv_bias:
+        ab.make("bq", (nh * hd,), ("heads",), init="zeros")
+        ab.make("bk", (nkv * hd,), ("kv_heads",), init="zeros")
+        ab.make("bv", (nkv * hd,), ("kv_heads",), init="zeros")
+
+
+def _proj(x, w, b, n, hd):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y.reshape(*x.shape[:-1], n, hd)
+
+
+def project_q(p, cfg: ModelConfig, x, positions):
+    q = _proj(x, p["wq"], p.get("bq"), -1, cfg.hd)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q
+
+
+def project_kv(p, cfg: ModelConfig, x, positions):
+    """Roped K and V from hidden states — also used to build the MemCom
+    compressed cache from memory representations (positions 0..m-1)."""
+    k = _proj(x, p["wk"], p.get("bk"), -1, cfg.hd)
+    v = _proj(x, p["wv"], p.get("bv"), -1, cfg.hd)
+    if cfg.pos_embed == "rope":
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return k, v
+
+
+def _prefix_kv(p, cfg: ModelConfig, prefix: dict):
+    if "k" in prefix:
+        return prefix["k"], prefix["v"]
+    h = prefix["h"]
+    B, m = h.shape[0], h.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (B, m))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos, (3, B, m))
+    return project_kv(p, cfg, h, pos)
+
+
+def apply_attention(
+    p,
+    cfg: ModelConfig,
+    x,
+    *,
+    positions,
+    mask_offset=0,
+    prefix: Optional[dict] = None,
+    cache: Optional[dict] = None,
+    cache_index=None,
+    kv_source=None,
+    decode: bool = False,
+    impl: str = "auto",
+):
+    """Returns (out (B,S,D), new_cache_or_None)."""
+    B, S, _ = x.shape
+    softcap = cfg.attn_logit_softcap
+    scale = cfg.hd**-0.5
+
+    # ---------------- cross-attention (enc-dec) ----------------
+    if kv_source is not None or (cache is not None and "ck" in cache):
+        q = _proj(x, p["wq"], p.get("bq"), -1, cfg.hd)  # no rope (whisper)
+        if cache is not None and "ck" in cache:
+            if kv_source is not None:  # prefill: project and store
+                k = _proj(kv_source, p["wk"], p.get("bk"), -1, cfg.hd)
+                v = _proj(kv_source, p["wv"], p.get("bv"), -1, cfg.hd)
+                cache = {"ck": k.astype(cache["ck"].dtype), "cv": v.astype(cache["cv"].dtype)}
+            k, v = cache["ck"], cache["cv"]
+        else:
+            k = _proj(kv_source, p["wk"], p.get("bk"), -1, cfg.hd)
+            v = _proj(kv_source, p["wv"], p.get("bv"), -1, cfg.hd)
+        F = k.shape[1]
+        q_pos = jnp.zeros((B, S), jnp.int32)
+        kv_pos = jnp.zeros((B, F), jnp.int32)
+        out = ops.attention(q, k.astype(q.dtype), v.astype(q.dtype), q_pos=q_pos,
+                            kv_pos=kv_pos, causal=False, softcap=softcap,
+                            scale=scale, impl=impl)
+        return out.reshape(B, S, -1) @ p["wo"], cache
+
+    q = project_q(p, cfg, x, positions)
+
+    # ---------------- decode: read/write KV cache ----------------
+    if decode:
+        assert cache is not None and cache_index is not None
+        k_new, v_new = project_kv(p, cfg, x, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=1)
+        max_len = k_cache.shape[1]
+        slot = jnp.arange(max_len, dtype=jnp.int32)
+        kv_pos = jnp.where(slot < cache_index + S, slot, -1)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, max_len))
+        q_pos = cache_index + jnp.arange(S, dtype=jnp.int32)
+        q_pos = jnp.broadcast_to(q_pos, (B, S))
+        out = ops.attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                            q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                            softcap=softcap, scale=scale, impl=impl)
+        return out.reshape(B, S, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+    # ---------------- train / prefill: full self-attention ----------------
+    k, v = project_kv(p, cfg, x, positions)
+    # TP-attention layout — one seq gather per layer instead of one per
+    # q-chunk/kv-chunk inside the streaming kernels.  Applied only when
+    # the KV heads divide the model axis: otherwise the GQA fold reshape
+    # (Hq → Hkv×G) cannot preserve the shard and XLA falls back to
+    # "involuntary full rematerialization" (measured: +3 % on jamba,
+    # whose kv=8 < 16 — EXPERIMENTS.md §Perf H4).
+    k_sh = head_sharded(k)
+    if k_sh is not k:
+        q, k, v = head_sharded(q), k_sh, head_sharded(v)
+    if (prefix is None and cache is not None
+            and isinstance(cache_index, int) and cache_index > 0):
+        # prefill continuation: slots [0, cache_index) are already seated
+        # (compressed memory or an earlier prefill segment) — attend to
+        # them as a fully-visible prefix.  Static start only.
+        prefix = {"k": cache["k"][:, :cache_index].astype(x.dtype),
+                  "v": cache["v"][:, :cache_index].astype(x.dtype)}
+    if prefix is not None:
+        k_pre, v_pre = _prefix_kv(p, cfg, prefix)
+        m = k_pre.shape[1]
+        out = ops.attention_with_prefix(
+            q, k, v, k_pre.astype(q.dtype), v_pre.astype(q.dtype),
+            offset=mask_offset if mask_offset else m,
+            softcap=softcap, scale=scale, impl=impl)
+    else:
+        out = ops.self_attention_causal(q, k, v, offset=mask_offset,
+                                        softcap=softcap, scale=scale, impl=impl)
+    new_cache = None
+    if cache is not None:  # prefill writes the cache
+        start = cache_index if cache_index is not None else 0
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), start, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), start, axis=1),
+        }
+    return out.reshape(B, S, -1) @ p["wo"], new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    nkv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, nkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, nkv, hd), dtype),
+    }
+
+
+def init_cross_cache(cfg: ModelConfig, batch: int, num_frames: int, dtype) -> dict:
+    nh, hd = cfg.num_heads, cfg.hd
+    return {
+        "ck": jnp.zeros((batch, num_frames, nh, hd), dtype),
+        "cv": jnp.zeros((batch, num_frames, nh, hd), dtype),
+    }

@@ -1,0 +1,142 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Layer: in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD over
+heads; gated RMSNorm; out_proj.  Prefill returns (conv_state, ssm_state)
+for the serving cache; decode performs the O(1) recurrent update.
+
+The SSM state is also what the hybrid (Jamba) MemCom adaptation hands off:
+a fixed-size, exact summary of the source context (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.param import ParamBuilder
+
+
+def _dims(cfg: ModelConfig):
+    mb = cfg.mamba
+    d = cfg.d_model
+    di = mb.d_inner(d)
+    nh = mb.nheads(d)
+    conv_dim = di + 2 * mb.ngroups * mb.d_state
+    return mb, d, di, nh, conv_dim
+
+
+def init_mamba(b: ParamBuilder, cfg: ModelConfig) -> None:
+    mb, d, di, nh, conv_dim = _dims(cfg)
+    m = b.child("mamba")
+    m.make("in_proj", (d, 2 * di + 2 * mb.ngroups * mb.d_state + nh),
+           ("embed", "mamba_inner"))
+    m.make("conv_w", (mb.conv_width, conv_dim), (None, "mamba_inner"),
+           init="normal", scale=mb.conv_width**-0.5)
+    m.make("conv_b", (conv_dim,), ("mamba_inner",), init="zeros")
+    m.make("A_log", (nh,), ("mamba_heads",), init="uniform", dtype=jnp.float32)
+    m.make("dt_bias", (nh,), ("mamba_heads",), init="zeros", dtype=jnp.float32)
+    m.make("D", (nh,), ("mamba_heads",), init="ones", dtype=jnp.float32)
+    m.make("norm", (di,), ("mamba_inner",), init="ones")
+    m.make("out_proj", (di, d), ("mamba_inner", "embed"))
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    mb, _, di, nh, _ = _dims(cfg)
+    gn = mb.ngroups * mb.d_state
+    return jnp.split(proj, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn], axis=-1)
+
+
+def _gated_norm(y, z, scale, eps):
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = g * jax.lax.rsqrt((g**2).mean(-1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_mamba(
+    p,
+    cfg: ModelConfig,
+    x,
+    *,
+    cache: Optional[dict] = None,
+    decode: bool = False,
+    init_state=None,
+    impl: str = "auto",
+):
+    """Returns (out (B,S,D), new_cache_or_None).
+
+    cache = {"conv": (B, W-1, conv_dim), "ssm": (B, H, P, N) fp32}.
+    ``init_state`` lets the hybrid MemCom adaptation seed the recurrence
+    with the source context's final state.
+    """
+    mb, d, di, nh, conv_dim = _dims(cfg)
+    B, S, _ = x.shape
+    W = mb.conv_width
+
+    proj = x @ p["in_proj"]
+    z, xr, Bm_r, Cm_r, dt_r = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xr, Bm_r, Cm_r], axis=-1)  # (B,S,conv_dim)
+
+    if decode:
+        assert cache is not None and S == 1
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,W,conv)
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None, :]
+        new_conv = window[:, 1:, :]
+    else:
+        if cache is not None:
+            # chained prefill: the conv window continues from the cached
+            # last W-1 raw inputs (zeros on the first segment)
+            padded = jnp.concatenate(
+                [cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        else:
+            padded = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+        # causal depthwise conv as a sum of W shifted copies (cheap, fused)
+        conv_out = sum(
+            padded[:, i : i + S, :].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+            for i in range(W)
+        )
+        conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+        new_conv = padded[:, S : S + W - 1, :]  # last W-1 raw inputs
+
+    conv_out = conv_out.astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + mb.ngroups * mb.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    xh = xs.reshape(B, S, nh, mb.headdim)
+    Bg = Bm.reshape(B, S, mb.ngroups, mb.d_state)
+    Cg = Cm.reshape(B, S, mb.ngroups, mb.d_state)
+
+    state0 = init_state
+    if state0 is None and cache is not None:
+        state0 = cache["ssm"]  # decode step or chained prefill
+    if decode:
+        y1, new_ssm = ops.ssd_decode_step(
+            state0, xh[:, 0], dt[:, 0], A, Bg[:, 0], Cg[:, 0])
+        y = y1[:, None]
+    else:
+        y, new_ssm = ops.ssd(xh, dt, A, Bg, Cg, init_state=state0,
+                             chunk=mb.chunk_size, impl=impl)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    mb, d, di, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, mb.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, mb.headdim, mb.d_state), jnp.float32),
+    }

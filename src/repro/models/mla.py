@@ -1,0 +1,168 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill use the standard (non-absorbed) form; decode uses the
+*absorbed* form, where attention runs directly in the compressed latent
+space: queries are folded through W_uk so the whole step is MQA with one
+shared (kv_lora + rope)-wide key and a kv_lora-wide value — this is the
+memory/computation win that makes the 512-float-per-token cache usable.
+
+MemCom composes naturally: the compressed memory representations O^i are
+pushed through the frozen W_dkv, so the prefix cache is itself an MLA
+latent cache (two-level compression — see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import apply_rope
+from repro.models.param import ParamBuilder
+
+
+def init_mla(b: ParamBuilder, cfg: ModelConfig, name: str = "attn") -> None:
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.num_heads
+    ab = b.child(name)
+    ab.make("wdq", (d, m.q_lora_rank), ("embed", "mla_lora"))
+    ab.make("q_norm", (m.q_lora_rank,), ("mla_lora",), init="ones")
+    ab.make("wuq", (m.q_lora_rank, nh * m.qk_head_dim), ("mla_lora", "heads"))
+    ab.make("wdkv", (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "mla_lora"))
+    ab.make("kv_norm", (m.kv_lora_rank,), ("mla_lora",), init="ones")
+    ab.make("wukv", (m.kv_lora_rank, nh * (m.qk_nope_head_dim + m.v_head_dim)),
+            ("mla_lora", "heads"))
+    ab.make("wo", (nh * m.v_head_dim, d), ("heads", "embed"), fan_in=nh * m.v_head_dim)
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf**2).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _latent(p, cfg: ModelConfig, x, positions):
+    """x -> (ckv_norm (B,S,R), k_rope (B,S,1,rd)) — the MLA cache entries."""
+    m = cfg.mla
+    ckv_full = x @ p["wdkv"]
+    ckv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    ckv = _rms(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return ckv, k_rope
+
+
+def _queries(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    nh = cfg.num_heads
+    cq = _rms(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(*x.shape[:-1], nh, m.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _expand_kv(p, cfg: ModelConfig, ckv):
+    m = cfg.mla
+    nh = cfg.num_heads
+    kv = (ckv @ p["wukv"]).reshape(*ckv.shape[:-1], nh, m.qk_nope_head_dim + m.v_head_dim)
+    return jnp.split(kv, [m.qk_nope_head_dim], axis=-1)  # k_nope, v
+
+
+def apply_mla(
+    p,
+    cfg: ModelConfig,
+    x,
+    *,
+    positions,
+    mask_offset=0,
+    prefix: Optional[dict] = None,
+    cache: Optional[dict] = None,
+    cache_index=None,
+    decode: bool = False,
+    impl: str = "auto",
+):
+    """Returns (out, new_cache_or_None).  Cache = {"ckv", "kr"}."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    nh = cfg.num_heads
+    scale = m.qk_head_dim**-0.5
+
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+
+    if decode:  # ---------------- absorbed decode ----------------
+        assert cache is not None and cache_index is not None
+        ckv_new, kr_new = _latent(p, cfg, x, positions)
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_index, axis=1)
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr_new[:, :, 0, :].astype(cache["kr"].dtype), cache_index, axis=1)
+        # fold q through W_uk:  q_abs[b,s,h,R] = q_nope . wuk[h]
+        wukv = p["wukv"].reshape(m.kv_lora_rank, nh, m.qk_nope_head_dim + m.v_head_dim)
+        wuk = wukv[:, :, : m.qk_nope_head_dim]
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)
+        q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B,S,nh,R+rd)
+        k_eff = jnp.concatenate([ckv_cache, kr_cache], axis=-1)[:, :, None, :]
+        v_eff = ckv_cache[:, :, None, :]  # MQA: 1 shared kv head
+        max_len = k_eff.shape[1]
+        slot = jnp.arange(max_len, dtype=jnp.int32)
+        kv_pos = jnp.broadcast_to(jnp.where(slot < cache_index + S, slot, -1), (B, max_len))
+        q_pos = jnp.broadcast_to(cache_index + jnp.arange(S, dtype=jnp.int32), (B, S))
+        o_lat = ops.attention(q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
+                              q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                              scale=scale, impl=impl)  # (B,S,nh,R)
+        wuv = wukv[:, :, m.qk_nope_head_dim :]
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv)
+        return out.reshape(B, S, -1) @ p["wo"], {"ckv": ckv_cache, "kr": kr_cache}
+
+    # ---------------- train / prefill: non-absorbed ----------------
+    if (prefix is None and cache is not None
+            and isinstance(cache_index, int) and cache_index > 0):
+        # prefill continuation over already-seated latent slots
+        prefix = {"ckv": cache["ckv"][:, :cache_index],
+                  "kr": cache["kr"][:, :cache_index]}
+    ckv, k_rope = _latent(p, cfg, x, positions)
+    k_nope, v = _expand_kv(p, cfg, ckv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    if prefix is not None:
+        if "ckv" in prefix:
+            ckv_pre, kr_pre = prefix["ckv"], prefix["kr"]
+        else:  # derive latent prefix from compressed memory hiddens O^i
+            h_pre = prefix["h"]
+            mlen = h_pre.shape[1]
+            pre_pos = jnp.broadcast_to(jnp.arange(mlen, dtype=jnp.int32), (B, mlen))
+            ckv_pre, kr4 = _latent(p, cfg, h_pre, pre_pos)
+            kr_pre = kr4[:, :, 0, :]
+        kn_pre, v_pre = _expand_kv(p, cfg, ckv_pre)
+        mlen = ckv_pre.shape[1]
+        k_pre = jnp.concatenate(
+            [kn_pre, jnp.broadcast_to(kr_pre[:, :, None, :], (*kn_pre.shape[:3], m.qk_rope_head_dim))],
+            axis=-1)
+        out = ops.attention_with_prefix(
+            q, k, v, k_pre.astype(q.dtype), v_pre.astype(q.dtype),
+            offset=mask_offset if mask_offset else mlen, scale=scale, impl=impl)
+    else:
+        out = ops.self_attention_causal(q, k, v, offset=mask_offset,
+                                        scale=scale, impl=impl)
+    new_cache = None
+    if cache is not None:
+        start = cache_index if cache_index is not None else 0
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), start, axis=1),
+            "kr": jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), start, axis=1),
+        }
+    return out.reshape(B, S, -1) @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }

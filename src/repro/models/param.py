@@ -1,0 +1,76 @@
+"""Parameter builder: creates params and records logical sharding axes.
+
+One code path serves real initialization and abstract (ShapeDtypeStruct)
+construction for the dry-run, so the parameter tree and its logical-axis
+tree can never drift apart.  Logical axes are mapped to mesh axes by
+:mod:`repro.sharding.rules`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.rng import Keys
+
+
+def _insert(tree: dict, path: Tuple[str, ...], leaf):
+    node = tree
+    for p in path[:-1]:
+        node = node.setdefault(p, {})
+    assert path[-1] not in node, f"duplicate param {'/'.join(path)}"
+    node[path[-1]] = leaf
+
+
+class ParamBuilder:
+    """Hierarchical builder.  ``child(name)`` scopes; ``child(name, stack=n)``
+    prepends a stacked-layer dim (logical axis "layers") to everything below
+    — used for scan-over-period parameter stacking."""
+
+    def __init__(self, keys: Keys, dtype, abstract: bool = False,
+                 _store=None, _path: Tuple[str, ...] = (), _stack: Tuple[int, ...] = ()):
+        self.keys = keys
+        self.dtype = dtype
+        self.abstract = abstract
+        self.store = _store if _store is not None else {"params": {}, "axes": {}}
+        self.path = _path
+        self.stack = _stack
+
+    def child(self, name: str, stack: Optional[int] = None) -> "ParamBuilder":
+        st = self.stack + ((stack,) if stack else ())
+        return ParamBuilder(self.keys, self.dtype, self.abstract,
+                            _store=self.store, _path=self.path + (name,), _stack=st)
+
+    def make(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             init: str = "fanin", scale: float = 1.0, fan_in: Optional[int] = None,
+             dtype=None) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        full_shape = self.stack + tuple(shape)
+        full_axes = ("layers",) * len(self.stack) + tuple(axes)
+        dt = dtype or self.dtype
+        path = self.path + (name,)
+        if self.abstract:
+            leaf = jax.ShapeDtypeStruct(full_shape, dt)
+        else:
+            key = self.keys("/".join(path))
+            if init == "zeros":
+                leaf = jnp.zeros(full_shape, dt)
+            elif init == "ones":
+                leaf = jnp.ones(full_shape, dt)
+            elif init == "normal":
+                leaf = (scale * jax.random.normal(key, full_shape, jnp.float32)).astype(dt)
+            elif init == "fanin":
+                fi = fan_in if fan_in is not None else (shape[-2] if len(shape) >= 2 else shape[-1])
+                leaf = (scale * (fi**-0.5) * jax.random.normal(key, full_shape, jnp.float32)).astype(dt)
+            elif init == "uniform":
+                leaf = (scale * jax.random.uniform(key, full_shape, jnp.float32, -1, 1)).astype(dt)
+            else:
+                raise ValueError(init)
+        _insert(self.store["params"], path, leaf)
+        _insert(self.store["axes"], path, full_axes)
+        return leaf
+
+    def build(self):
+        return self.store["params"], self.store["axes"]

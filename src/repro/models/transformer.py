@@ -1,0 +1,313 @@
+"""The model: embedding → (prefix blocks, scanned period blocks) → head.
+
+One ``forward`` serves all three MemCom stacks:
+
+* Source-LLM   — ``capture_hiddens=True`` → per-layer input reps H^i
+* Memory-LLM   — ``memcom={"params": …, "src": …}`` → per-layer O^i
+* Target-LLM   — ``prefix=…`` → attends to compressed per-layer context
+
+Layer-wise quantities (params, caches, captured hiddens, prefixes, omegas)
+all share the *Layerwise* layout::
+
+    {"prefix": [per-layer, ...], "period": {"l0": stacked(repeats, ...), ...}}
+
+so the three stacks (which are copies of the same architecture) can
+exchange them directly, and the period part rides through ``jax.lax.scan``
+as xs/ys with a leading ``repeats`` dim.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.blocks import apply_block, init_block, init_block_cache
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    init_mlp,
+    init_norm,
+    sinusoidal_pos_embed,
+    softcap,
+)
+from repro.models.attention import apply_attention, init_attention
+from repro.models.param import ParamBuilder
+from repro.sharding.ctx import constrain
+from repro.utils.rng import Keys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int | Keys = 0, abstract: bool = False):
+    params, _ = _build(cfg, seed, abstract)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Logical-axis tree matching init_params structure (abstract build)."""
+    _, axes = _build(cfg, 0, abstract=True)
+    return axes
+
+
+def abstract_params(cfg: ModelConfig):
+    params, _ = _build(cfg, 0, abstract=True)
+    return params
+
+
+def _build(cfg: ModelConfig, seed, abstract: bool):
+    cfg.validate()
+    keys = seed if isinstance(seed, Keys) else Keys(seed)
+    dtype = jnp.dtype(cfg.dtype)
+    b = ParamBuilder(keys, dtype, abstract)
+
+    eb = b.child("embed")
+    eb.make("tokens", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            init="normal", scale=cfg.d_model**-0.5)
+    if cfg.pos_embed == "learned":
+        eb.make("pos", (cfg.max_seq, cfg.d_model), (None, "embed"),
+                init="normal", scale=0.02)
+
+    if cfg.encoder is not None:
+        enc = b.child("encoder")
+        pb = enc.child("period", stack=cfg.encoder.num_layers)
+        lb = pb.child("l0")
+        init_norm(lb, cfg, "norm1")
+        init_attention(lb, cfg)
+        init_norm(lb, cfg, "norm2")
+        init_mlp(lb, cfg, d_ff=cfg.encoder.d_ff, mlp_type="gelu_mlp")
+        init_norm(enc, cfg, "final_norm")
+
+    for i, desc in enumerate(cfg.layout.prefix):
+        init_block(b.child(f"prefix_{i}"), cfg, desc)
+    if cfg.layout.repeats:
+        pb = b.child("period", stack=cfg.layout.repeats)
+        for j, desc in enumerate(cfg.layout.period):
+            init_block(pb.child(f"l{j}"), cfg, desc)
+
+    init_norm(b, cfg, "final_norm")
+    if not cfg.tie_embeddings:
+        b.make("lm_head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# Layerwise helpers
+# ---------------------------------------------------------------------------
+
+
+def _lw_prefix(lw, i):
+    if lw is None:
+        return None
+    entry = lw.get("prefix")
+    if entry is None:
+        return None
+    return entry[i]
+
+
+def _lw_period(lw):
+    if lw is None:
+        return {}
+    return lw.get("period") or {}
+
+
+def layerwise(prefix_list, period_dict):
+    out = {}
+    if prefix_list:
+        out["prefix"] = prefix_list
+    if period_dict:
+        out["period"] = period_dict
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper stub frontend: precomputed frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+def encode(enc_params, cfg: ModelConfig, frames, *, impl: str = "auto",
+           unroll: bool = False):
+    B, F, D = frames.shape
+    h = frames + sinusoidal_pos_embed(F, D).astype(frames.dtype)[None]
+
+    def body(h, lp):
+        p = lp["l0"]
+        hn = apply_norm(p["norm1"], cfg, h)
+        o, _ = apply_attention(p["attn"], cfg, hn, positions=None,
+                               kv_source=hn, impl=impl)
+        h = h + o
+        hn = apply_norm(p["norm2"], cfg, h)
+        h = h + apply_mlp(p["mlp"], cfg, hn, mlp_type="gelu_mlp")
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, enc_params["period"], unroll=True if unroll else 1)
+    return apply_norm(enc_params["final_norm"], cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    *,
+    tokens=None,
+    embeds=None,
+    positions=None,
+    mask_offset=0,
+    prefix: Optional[dict] = None,  # Layerwise compressed context (MemCom)
+    cache: Optional[dict] = None,  # Layerwise KV/state cache
+    cache_index=None,
+    decode: bool = False,
+    capture_hiddens: bool = False,
+    memcom: Optional[dict] = None,  # {"params": Layerwise, "src": Layerwise}
+    encoder_frames=None,
+    encoder_out=None,
+    remat: bool = False,
+    remat_policy: Optional[Any] = None,
+    logits: bool = True,
+    unroll: bool = False,  # unroll layer scans (dry-run cost extraction)
+    impl: str = "auto",
+):
+    """Returns (logits_or_hidden, aux).
+
+    aux keys: "cache" (Layerwise), "hiddens" (Layerwise, layer inputs H^i),
+    "omega" (Layerwise, Memory-LLM compressed reps O^i), "moe_loss",
+    "encoder_out".
+    """
+    if embeds is None:
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+    else:
+        h = embeds
+    h = constrain(h)  # residual-stream sharding (repro.sharding.ctx)
+    B, S = h.shape[0], h.shape[1]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    start = cache_index if (decode and cache_index is not None) else mask_offset
+    if cfg.pos_embed == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], start, S, axis=0)
+        h = h + pe[None].astype(h.dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(start + jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+
+    if cfg.encoder is not None and encoder_frames is not None and encoder_out is None:
+        encoder_out = encode(params["encoder"], cfg, encoder_frames, impl=impl,
+                             unroll=unroll)
+
+    aux_loss = jnp.float32(0.0)
+    n_prefix = len(cfg.layout.prefix)
+    caps_p, omegas_p, caches_p = [], [], []
+
+    memx_params = memcom["params"] if memcom is not None else None
+    memx_src = memcom["src"] if memcom is not None else None
+
+    def one_block(p, desc, h, *, lpre, lcache, lmemx, lsrc):
+        mem = None
+        if lmemx is not None and desc.mixer in ("attn", "mla"):
+            mem = {"params": lmemx, "src": lsrc}
+        return apply_block(
+            p, cfg, desc, h, positions=positions, mask_offset=mask_offset,
+            prefix=lpre, cache=lcache, cache_index=cache_index, decode=decode,
+            encoder_out=encoder_out, memcom=mem, impl=impl)
+
+    for i, desc in enumerate(cfg.layout.prefix):
+        if capture_hiddens:
+            caps_p.append(h)
+        fn = one_block
+        if remat:
+            fn = jax.checkpoint(one_block, policy=remat_policy,
+                                static_argnums=(1,))
+        h, c, a = fn(params[f"prefix_{i}"], desc, h,
+                     lpre=_lw_prefix(prefix, i), lcache=_lw_prefix(cache, i),
+                     lmemx=_lw_prefix(memx_params, i),
+                     lsrc=_lw_prefix(memx_src, i))
+        h = constrain(h)
+        aux_loss = aux_loss + a["moe_loss"]
+        if c is not None:
+            caches_p.append(c)
+        if a["omega"] is not None:
+            omegas_p.append(a["omega"])
+
+    period_caches, period_caps, period_omegas = {}, {}, {}
+    if cfg.layout.repeats:
+        xs = (
+            params["period"],
+            _lw_period(prefix),
+            _lw_period(cache),
+            _lw_period(memx_params),
+            _lw_period(memx_src),
+        )
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, lpre, lcache, lmemx, lsrc = xs
+            new_caches, caps, omegas = {}, {}, {}
+            for j, desc in enumerate(cfg.layout.period):
+                key = f"l{j}"
+                if capture_hiddens:
+                    caps[key] = h
+                h, c, a = one_block(
+                    lp[key], desc, h,
+                    lpre=lpre.get(key) if lpre else None,
+                    lcache=lcache.get(key) if lcache else None,
+                    lmemx=lmemx.get(key) if lmemx else None,
+                    lsrc=lsrc.get(key) if lsrc else None)
+                h = constrain(h)
+                aux = aux + a["moe_loss"]
+                if c is not None:
+                    new_caches[key] = c
+                if a["omega"] is not None:
+                    omegas[key] = a["omega"]
+            return (h, aux), (new_caches, caps, omegas)
+
+        scan_body = jax.checkpoint(body, policy=remat_policy) if remat else body
+        (h, aux_loss), (period_caches, period_caps, period_omegas) = jax.lax.scan(
+            scan_body, (h, aux_loss), xs, unroll=True if unroll else 1)
+
+    hn = apply_norm(params["final_norm"], cfg, h)
+    out = hn
+    if logits:
+        if cfg.tie_embeddings:
+            out = hn @ params["embed"]["tokens"].T
+        else:
+            out = hn @ params["lm_head"]
+        out = softcap(out, cfg.final_logit_softcap)
+
+    aux = {
+        "moe_loss": aux_loss,
+        "cache": layerwise(caches_p, period_caches) if cache is not None else None,
+        "hiddens": layerwise(caps_p, period_caps) if capture_hiddens else None,
+        "omega": layerwise(omegas_p, period_omegas) if memcom is not None else None,
+        "encoder_out": encoder_out,
+    }
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    prefix = [
+        init_block_cache(cfg, desc, batch, max_len, dtype)
+        for desc in cfg.layout.prefix
+    ]
+    period = {}
+    if cfg.layout.repeats:
+        for j, desc in enumerate(cfg.layout.period):
+            one = init_block_cache(cfg, desc, batch, max_len, dtype)
+            period[f"l{j}"] = jax.tree.map(
+                lambda x: jnp.zeros((cfg.layout.repeats,) + x.shape, x.dtype), one)
+    return layerwise(prefix, period)

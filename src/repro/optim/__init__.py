@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine, warmup_constant
+from repro.optim.transforms import (
+    global_norm,
+    clip_by_global_norm,
+    compress_grads_bf16,
+    ErrorFeedbackInt8,
+)
+
+__all__ = [
+    "AdamW",
+    "warmup_cosine",
+    "warmup_constant",
+    "global_norm",
+    "clip_by_global_norm",
+    "compress_grads_bf16",
+    "ErrorFeedbackInt8",
+]

@@ -1,0 +1,79 @@
+"""AdamW with trainable-parameter masking and fp32 master weights.
+
+Optimizer state is a *flat name-keyed dict* holding entries only for
+trainable leaves — frozen params (the Target-LLM in both MemCom phases,
+~99% of the compressor in Phase-1) cost zero optimizer memory.  Flat
+naming also makes the state trivially checkpointable and shardable (a
+state entry inherits its param's sharding spec by name).
+
+``{"mu": {name: f32}, "nu": {...}, "master": {...}, "count": i32}``
+Master fp32 copies exist only for trainable params stored in lower
+precision.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_flatten_with_names
+
+
+class AdamW:
+    def __init__(self, lr: Callable | float, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, weight_decay: float = 0.0,
+                 mask: Optional[object] = None):
+        self.lr = lr if callable(lr) else (lambda _: jnp.float32(lr))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.mask = mask
+
+    def _trainable(self, params):
+        names = [n for n, _ in tree_flatten_with_names(params)]
+        if self.mask is None:
+            return {n: True for n in names}
+        mleaves = [bool(m) for _, m in tree_flatten_with_names(self.mask)]
+        return dict(zip(names, mleaves))
+
+    def init(self, params):
+        flat = dict(tree_flatten_with_names(params))
+        tr = self._trainable(params)
+        mu = {n: jnp.zeros(p.shape, jnp.float32) for n, p in flat.items() if tr[n]}
+        nu = {n: jnp.zeros(p.shape, jnp.float32) for n, p in flat.items() if tr[n]}
+        master = {n: p.astype(jnp.float32) for n, p in flat.items()
+                  if tr[n] and p.dtype != jnp.float32}
+        return {"mu": mu, "nu": nu, "master": master,
+                "count": jnp.zeros((), jnp.int32)}
+
+    def step(self, params, grads, state):
+        count = state["count"] + 1
+        lr = self.lr(count)
+        b1, b2, eps, wd = self.b1, self.b2, self.eps, self.weight_decay
+        cf = count.astype(jnp.float32)
+        bc1 = 1 - b1**cf
+        bc2 = 1 - b2**cf
+
+        leaves, treedef = jax.tree.flatten(params)
+        names = [n for n, _ in tree_flatten_with_names(params)]
+        gflat = dict(tree_flatten_with_names(grads))
+        tr = self._trainable(params)
+
+        new_leaves = []
+        mu, nu, master = dict(state["mu"]), dict(state["nu"]), dict(state["master"])
+        for n, p in zip(names, leaves):
+            if not tr.get(n, False):
+                new_leaves.append(p)
+                continue
+            g32 = gflat[n].astype(jnp.float32)
+            mu[n] = b1 * mu[n] + (1 - b1) * g32
+            nu[n] = b2 * nu[n] + (1 - b2) * (g32 * g32)
+            p32 = master.get(n, p.astype(jnp.float32))
+            step = (mu[n] / bc1) / (jnp.sqrt(nu[n] / bc2) + eps)
+            p32 = p32 - lr * (step + wd * p32)
+            if n in master:
+                master[n] = p32
+            new_leaves.append(p32.astype(p.dtype))
+        new_params = jax.tree.unflatten(treedef, new_leaves)
+        return new_params, {"mu": mu, "nu": nu, "master": master, "count": count}

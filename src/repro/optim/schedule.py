@@ -1,0 +1,25 @@
+"""Learning-rate schedules (paper A.2: warmup 0.5k–1.5k steps)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_constant(peak: float, warmup_steps: int):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+
+    return lr
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, peak * cos)
+
+    return lr

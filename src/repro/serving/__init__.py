@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, materialize_prefix
+
+__all__ = ["ServingEngine", "materialize_prefix"]

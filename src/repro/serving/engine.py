@@ -1,0 +1,172 @@
+"""Batched serving engine over compressed caches.
+
+Deployment story (paper §1: cloud compresses offline, edge serves):
+
+1. ``core.compress`` produces per-layer O^i once, offline.
+2. ``materialize_prefix`` pushes O^i through the frozen target's K/V
+   (or MLA latent) projections → a compressed KV cache of m slots
+   (mamba layers keep their handed-off state).
+3. ``ServingEngine`` seats the compressed cache in slots [0, m), prefills
+   request tokens after it, and decodes — every step attends to m memory
+   slots instead of t raw context tokens.
+
+The engine keeps fixed batch slots (continuous-batching-lite): requests
+are padded into slots; finished slots are refillable via ``reset_slots``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.attention import project_kv
+from repro.models.mla import _latent  # shared latent-cache constructor
+
+
+def materialize_prefix(target_params, cfg: ModelConfig, prefix):
+    """Turn {"h": O^i} entries into precomputed compressed caches:
+    attn -> {"k","v"}; mla -> {"ckv","kr"}; mamba -> passthrough state."""
+
+    def project(desc, layer_params, entry):
+        if "h" not in entry:
+            return entry
+        h = entry["h"]
+        B, m = h.shape[0], h.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (B, m))
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos, (3, B, m))
+        if desc.mixer == "mla":
+            ckv, kr = _latent(layer_params["attn"], cfg, h, pos)
+            return {"ckv": ckv, "kr": kr[:, :, 0, :]}
+        k, v = project_kv(layer_params["attn"], cfg, h, pos)
+        return {"k": k, "v": v}
+
+    out = {}
+    if "prefix" in prefix:
+        out["prefix"] = [
+            project(desc, target_params[f"prefix_{i}"], prefix["prefix"][i])
+            for i, desc in enumerate(cfg.layout.prefix)
+        ]
+    if "period" in prefix:
+        period = {}
+        for j, desc in enumerate(cfg.layout.period):
+            key = f"l{j}"
+            entry = prefix["period"][key]
+            lp = jax.tree.map(lambda x: x, target_params["period"][key])
+            fn = partial(project, desc)
+            period[key] = jax.vmap(fn)(lp, entry)  # map over stacked layers
+        out["period"] = period
+    return out
+
+
+def write_prefix_to_cache(cfg: ModelConfig, cache, prefix):
+    """Seat compressed memory slots at cache positions [0, m)."""
+
+    def seat(c, p):
+        c = dict(c)
+        for key in ("k", "v", "ckv", "kr"):
+            if key in p:
+                axis = 1
+                c[key] = jax.lax.dynamic_update_slice_in_dim(
+                    c[key], p[key].astype(c[key].dtype), 0, axis=axis)
+        if "ssm" in p:
+            c["ssm"] = p["ssm"].astype(c["ssm"].dtype)
+        return c
+
+    out = {}
+    if "prefix" in cache:
+        out["prefix"] = [seat(c, p) for c, p in
+                         zip(cache["prefix"], prefix.get("prefix", []))]
+    if "period" in cache:
+        out["period"] = {}
+        for key, c in cache["period"].items():
+            p = prefix.get("period", {}).get(key)
+            if p is None:
+                out["period"][key] = c
+                continue
+            # both stacked on the layer dim: seat per-layer via vmap
+            out["period"][key] = jax.vmap(seat)(c, p)
+    return out
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, target_params, *, slots: int,
+                 max_len: int, impl: str = "auto"):
+        self.cfg = cfg
+        self.params = target_params
+        self.slots = slots
+        self.max_len = max_len
+        self.impl = impl
+        self.cache = tfm.init_cache(cfg, slots, max_len)
+        self.base_len = 0  # memory-slot count seated at the front
+
+        def prefill_fn(params, cache, tokens, start):
+            logits, aux = tfm.forward(
+                params, cfg, tokens=tokens, cache=cache, cache_index=start,
+                mask_offset=start, impl=impl)
+            return logits[:, -1], aux["cache"]
+
+        def decode_fn(params, cache, tok, index):
+            logits, aux = tfm.forward(
+                params, cfg, tokens=tok, cache=cache, cache_index=index,
+                decode=True, impl=impl)
+            return logits[:, -1], aux["cache"]
+
+        # start is static: prefill-continuation slices the seated cache
+        # region with a python int (stable across calls ⇒ no recompiles)
+        self._prefill = jax.jit(prefill_fn, static_argnums=(3,))
+        self._decode = jax.jit(decode_fn)
+
+    def seat_compressed(self, prefix_materialized):
+        """Install an offline-compressed many-shot context for all slots."""
+        self.cache = write_prefix_to_cache(self.cfg, self.cache,
+                                           prefix_materialized)
+        assert self.cfg.memcom is not None
+        self.base_len = self.cfg.memcom.num_memory_tokens
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 stop_token: Optional[int] = None) -> np.ndarray:
+        """prompts: (slots, S) right-aligned token batch (no ragged support
+        in this lite engine — pad upstream).  Greedy when temperature=0."""
+        assert prompts.shape[0] == self.slots
+        start = self.base_len
+        logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(prompts), start)
+        index = start + prompts.shape[1]
+        out = []
+        key = jax.random.key(seed)
+        tok = self._sample(logits, temperature, key)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            logits, self.cache = self._decode(
+                self.params, self.cache, tok[:, None], index + i)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+            if stop_token is not None and bool((np.asarray(tok) == stop_token).all()):
+                break
+        return np.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+    def score_labels(self, context: np.ndarray, query: np.ndarray,
+                     label_ids: np.ndarray) -> int:
+        """Constrained classification: argmax over label token ids for the
+        next token after [compressed prefix; context; query]."""
+        toks = np.concatenate([context, query])[None]
+        toks = np.repeat(toks, self.slots, axis=0)
+        start = self.base_len
+        logits, _ = self._prefill(self.params, self.cache,
+                                  jnp.asarray(toks), start)
+        row = np.asarray(logits[0])
+        return int(label_ids[np.argmax(row[label_ids])])

@@ -1,0 +1,21 @@
+from repro.sharding.rules import (
+    Rules,
+    BASELINE_RULES,
+    FSDP_RULES,
+    LAYERS_FSDP_RULES,
+    logical_to_shardings,
+    batch_sharding,
+    replicated,
+    opt_state_shardings,
+)
+
+__all__ = [
+    "Rules",
+    "BASELINE_RULES",
+    "FSDP_RULES",
+    "LAYERS_FSDP_RULES",
+    "logical_to_shardings",
+    "batch_sharding",
+    "replicated",
+    "opt_state_shardings",
+]

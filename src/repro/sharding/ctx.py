@@ -1,0 +1,119 @@
+"""Activation-sharding context (sequence parallelism for GSPMD).
+
+The model code stays sharding-agnostic; the launcher installs a residual-
+stream constraint (batch → data axes, seq → model axis) and
+:func:`repro.models.transformer.forward` calls :func:`constrain` at every
+block boundary.  GSPMD then keeps the saved/captured per-layer hidden
+states (the dominant live tensors in MemCom training — the Source-LLM
+captures H^i for all layers) sharded 2-D instead of replicating the
+sequence across the model axis; attention internals re-shard transiently
+as the partitioner dictates.
+
+Use as a context manager so dry-run cells can't leak constraints:
+
+    with act_sharding(NamedSharding(mesh, P("data", "model", None))):
+        lowered = jax.jit(step).lower(...)
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_ACT: Optional[jax.sharding.NamedSharding] = None
+
+
+def set_act_sharding(sharding: Optional[jax.sharding.NamedSharding]) -> None:
+    global _ACT
+    _ACT = sharding
+
+
+@contextlib.contextmanager
+def act_sharding(sharding: Optional[jax.sharding.NamedSharding]):
+    global _ACT
+    prev = _ACT
+    _ACT = sharding
+    try:
+        yield
+    finally:
+        _ACT = prev
+
+
+def constrain(h):
+    """Apply the installed (B, S, D) residual-stream constraint, if any."""
+    if _ACT is None or h.ndim != len(_ACT.spec):
+        return h
+    return jax.lax.with_sharding_constraint(h, _ACT)
+
+
+def head_sharded(x):
+    """Constrain a (B, S, H, hd) attention operand to
+    (batch→data, seq unsharded, heads→model): the classic TP-attention
+    layout.  Without this, every q-chunk slice / kv-chunk reshape of the
+    seq-sharded stream re-gathers the tensor — measured as the dominant
+    all-gather source after the MoE fix (EXPERIMENTS.md §Perf H4).
+    Returns x unchanged when no constraint is installed or heads don't
+    divide the model axis."""
+    if _ACT is None or x.ndim != 4:
+        return x
+    spec = _ACT.spec
+    b = spec[0]
+    model = _ACT.mesh.shape.get("model", 1)
+    if model <= 1 or x.shape[2] % model:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT.mesh, P(b, None, "model", None)))
+
+
+_MOE_PLAN = True
+
+
+@contextlib.contextmanager
+def moe_plan_disabled():
+    """Ablation switch: EP-only expert weights *without* the explicit
+    batch-local token reshard (EXPERIMENTS.md §Perf H3 attribution)."""
+    global _MOE_PLAN
+    prev = _MOE_PLAN
+    _MOE_PLAN = False
+    try:
+        yield
+    finally:
+        _MOE_PLAN = prev
+
+
+def moe_dispatch_plan(x, num_experts: int = 0):
+    """(x re-constrained batch-only, dispatch group count) for the MoE
+    token stream, derived from the installed residual sharding.
+
+    The sort/scatter dispatch cannot run over a sequence-sharded token
+    stream without GSPMD scrambling it into partial-sum all-reduces over
+    the (E, C, F) expert buffers (measured — EXPERIMENTS.md §Perf).  One
+    explicit reshard to (batch→data, seq unsharded) per MoE layer makes
+    the grouped dispatch exactly data-local; the block-boundary
+    :func:`constrain` re-shards the output back.  Returns (x, None) when
+    no constraint is installed (single-host tests, CPU benches) or when
+    the expert count does not divide the model axis — the plan only pays
+    off with shardable experts (granite's E=40 on a 16-way axis measured
+    9× *worse* with it; EXPERIMENTS.md §Perf)."""
+    if not _MOE_PLAN or _ACT is None or x.ndim != len(_ACT.spec):
+        return x, None
+    if num_experts and num_experts % _ACT.mesh.shape.get("model", 1):
+        return x, None
+    spec = _ACT.spec
+    b = spec[0]
+    if b is None:
+        return x, None
+    axes = (b,) if isinstance(b, str) else tuple(b)
+    n = 1
+    for a in axes:
+        n *= _ACT.mesh.shape[a]
+    if n <= 1 or x.shape[0] % n:
+        return x, None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    batch_only = NamedSharding(_ACT.mesh, P(b, *([None] * (x.ndim - 1))))
+    return jax.lax.with_sharding_constraint(x, batch_only), n

@@ -1,0 +1,114 @@
+"""Pipeline parallelism over the scanned layer stack (DESIGN.md §8).
+
+The period-stacked parameters (leading ``repeats`` dim) are split across
+the ``pod`` mesh axis: stage p holds layers [p·R/P, (p+1)·R/P).  The
+batch is split into M microbatches and a GPipe-style schedule runs
+T = M + P − 1 ticks; between ticks every stage hands its activations to
+the next stage with a single ``ppermute`` ring hop — the jax-native
+phrasing of the paper-scale P2P pipeline (no NCCL send/recv emulation).
+
+The whole schedule is one ``jax.lax.scan`` over ticks inside
+``shard_map``, so it is differentiable end-to-end (``ppermute``'s
+transpose is the reverse-ring ``ppermute``; XLA overlaps the hop with
+the next tick's stage compute — the standard TPU pipeline overlap).
+
+Bubble fraction = (P−1)/(M+P−1); callers pick M ≥ 4·P to keep it < 20%.
+
+Used by the multi-pod mesh when the ``pod`` axis is designated the
+pipeline axis; validated against the sequential scan in
+tests/test_pipeline.py (forward and gradients, 4-device host mesh).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(
+    stage_fn: Callable,  # (layer_params_stack, h) -> h   (one stage's layers)
+    period_params,  # pytree, leaves (R, ...) — layer-stacked
+    h,  # (B, S, D) input activations (embedded tokens)
+    *,
+    mesh: Mesh,
+    axis: str = "pod",
+    microbatches: int = 4,
+):
+    """Run the layer stack as a P-stage pipeline over ``axis``.
+
+    Semantically identical to ``scan(stage_fn)`` over all R layers;
+    physically each device computes only its R/P layers and activations
+    ride a ppermute ring.  B must divide by ``microbatches``.
+    """
+    Pn = mesh.shape[axis]
+    B = h.shape[0]
+    M = microbatches
+    assert B % M == 0, (B, M)
+    mb = B // M
+
+    # params: shard the layer-stack dim; activations enter replicated
+    # along the pipeline axis (each stage uses only its own microbatch
+    # slice at tick 0) and leave gathered from the last stage.
+    pspecs = jax.tree.map(lambda _: P(axis), period_params)
+    T = M + Pn - 1
+
+    def staged(params, h_all):
+        idx = jax.lax.axis_index(axis)
+        # (M, mb, S, D) microbatch queue, resident on every stage
+        q = h_all.reshape(M, mb, *h_all.shape[1:])
+        carry = jnp.zeros_like(q[0])  # in-flight activations on this stage
+        outs = jnp.zeros_like(q)  # completed microbatches (last stage)
+
+        def tick(state, t):
+            carry, outs = state
+            # stage 0 injects microbatch t; others use the handed-off carry
+            inject = jnp.where(t < M, t, 0)
+            h_in = jnp.where(idx == 0, q[inject], carry)
+            active = (t - idx >= 0) & (t - idx < M)
+            h_out = stage_fn(params, h_in)
+            h_out = jnp.where(active, h_out, h_in)
+            # last stage banks its finished microbatch m = t - (P-1)
+            bank = jnp.where((idx == Pn - 1) & active, t - (Pn - 1), 0)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs,
+                jnp.where((idx == Pn - 1) & active, h_out, outs[bank]),
+                bank, axis=0)
+            # ring hop: stage i -> i+1 (last stage's output drops off)
+            nxt = jax.lax.ppermute(
+                h_out, axis, [(i, (i + 1) % Pn) for i in range(Pn)])
+            return (nxt, outs), None
+
+        (carry, outs), _ = jax.lax.scan(tick, (carry, outs),
+                                        jnp.arange(T, dtype=jnp.int32))
+        # only the last stage's banked outputs are real; psum a masked
+        # copy so every stage leaves with the full result (replicated out)
+        outs = jnp.where(idx == Pn - 1, outs, 0)
+        outs = jax.lax.psum(outs, axis)
+        return outs.reshape(B, *h_all.shape[1:])
+
+    other = tuple(a for a in mesh.axis_names if a != axis)
+    return shard_map(
+        staged, mesh=mesh,
+        in_specs=(pspecs, P()),
+        out_specs=P(),
+        check_rep=False,
+    )(period_params, h)
+
+
+def stage_scan(apply_layer: Callable):
+    """Lift a per-layer body into a stage function: scans this stage's
+    (R/P, ...) parameter slice — same body the sequential model scans."""
+
+    def stage_fn(params_slice, h):
+        def body(h, lp):
+            return apply_layer(lp, h), None
+
+        h, _ = jax.lax.scan(body, h, params_slice)
+        return h
+
+    return stage_fn

@@ -1,0 +1,4 @@
+from repro.train.train_step import build_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["build_train_step", "Trainer", "TrainerConfig"]

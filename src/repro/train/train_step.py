@@ -1,0 +1,56 @@
+"""Train-step builder: value_and_grad + clip + optional microbatch
+accumulation + optional gradient compression + optimizer step.
+
+The returned function is pure (params, opt_state, batch) →
+(params, opt_state, metrics) and is jitted by the caller with whatever
+in/out shardings the run wants (see repro.launch.dryrun / trainer).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import clip_by_global_norm, compress_grads_bf16
+
+
+def build_train_step(loss_fn: Callable, optimizer, *, clip: float = 1.0,
+                     accum: int = 1, grad_bf16: bool = False):
+    """loss_fn(params, batch) -> (loss, aux_dict)."""
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, _aux, grads = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / accum, gsum, grads)
+                return (gsum, lsum + loss / accum), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (gsum0, jnp.float32(0.0)),
+                                            micro_batches)
+            aux = {}
+        else:
+            loss, aux, grads = grads_of(params, batch)
+
+        if grad_bf16:
+            grads = compress_grads_bf16(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        new_params, new_state = optimizer.step(params, grads, opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        for k, v in (aux or {}).items():
+            metrics[k] = v
+        return new_params, new_state, metrics
+
+    return train_step

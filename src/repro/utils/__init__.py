@@ -1,0 +1,19 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    tree_flatten_with_names,
+    pformat_tree,
+    tree_allclose,
+)
+from repro.utils.rng import Keys
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_map_with_path",
+    "tree_flatten_with_names",
+    "pformat_tree",
+    "tree_allclose",
+    "Keys",
+]

@@ -1,0 +1,62 @@
+"""Pytree helpers used across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (uses leaf dtype)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_string, leaf)`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def tree_flatten_with_names(tree: Any):
+    """Flatten to a list of (path_string, leaf)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(p), x) for p, x in flat]
+
+
+def pformat_tree(tree: Any) -> str:
+    lines = []
+    for name, leaf in tree_flatten_with_names(tree):
+        lines.append(f"{name:<60s} {str(leaf.shape):<24s} {leaf.dtype}")
+    return "\n".join(lines)
+
+
+def tree_allclose(a: Any, b: Any, *, rtol=1e-5, atol=1e-5) -> bool:
+    leaves_a, treedef_a = jax.tree.flatten(a)
+    leaves_b, treedef_b = jax.tree.flatten(b)
+    if treedef_a != treedef_b:
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )

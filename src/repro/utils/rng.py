@@ -1,0 +1,29 @@
+"""Deterministic PRNG-key folding helper.
+
+``Keys`` wraps a root key and hands out named subkeys; the same name always
+yields the same subkey, so parameter initialization is order-independent.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def _name_to_int(name: str) -> int:
+    return int.from_bytes(hashlib.blake2s(name.encode(), digest_size=4).digest(), "little")
+
+
+class Keys:
+    def __init__(self, key_or_seed):
+        if isinstance(key_or_seed, int):
+            self.key = jax.random.key(key_or_seed)
+        else:
+            self.key = key_or_seed
+
+    def __call__(self, name: str) -> jax.Array:
+        return jax.random.fold_in(self.key, _name_to_int(name))
+
+    def child(self, name: str) -> "Keys":
+        return Keys(self(name))

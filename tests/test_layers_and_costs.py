@@ -1,0 +1,111 @@
+"""Layer-level math properties (RoPE, norms, softcap) and analytic cost
+model invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SHAPES
+from repro.configs import get_config
+from repro.launch import costs
+from repro.models.layers import apply_rope, sinusoidal_pos_embed, softcap
+
+
+def test_rope_relative_position_property(rng):
+    """q·k after RoPE depends only on the position *difference*."""
+    B, H, D = 1, 1, 32
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 10_000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.einsum("bshd,bshd->", qr, kr))
+
+    assert abs(score(3, 7) - score(103, 107)) < 1e-3
+    assert abs(score(0, 4) - score(50, 54)) < 1e-3
+    assert abs(score(3, 7) - score(3, 8)) > 1e-4  # different offsets differ
+
+
+def test_mrope_text_diagonal_equals_rope(rng):
+    """Identical t/h/w position streams reduce M-RoPE to standard RoPE."""
+    B, S, H, D = 2, 6, 2, 32
+    x = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos3 = jnp.broadcast_to(pos, (3, B, S))
+    a = apply_rope(x, pos, 10_000.0)
+    b = apply_rope(x, pos3, 10_000.0, mrope_sections=(8, 4, 4))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_softcap_bounds_and_identity():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 50.0)
+    assert float(jnp.abs(y).max()) <= 50.0
+    assert bool(jnp.all(jnp.diff(y) >= 0))  # monotone
+    np.testing.assert_array_equal(np.asarray(softcap(x, 0.0)), np.asarray(x))
+
+
+def test_sinusoidal_shape_and_range():
+    pe = sinusoidal_pos_embed(16, 32)
+    assert pe.shape == (16, 32)
+    assert float(jnp.abs(pe).max()) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model
+# ---------------------------------------------------------------------------
+
+
+def _shape(name):
+    return next(s for s in SHAPES if s.name == name)
+
+
+def test_lm_train_flops_close_to_6nd():
+    """Dense LM training ≈ 6·N·D·tokens (attention adds the seq term)."""
+    cfg = get_config("smollm-360m")
+    shape = _shape("train_4k")
+    cc = costs.lm_train_cost(cfg, shape)
+    ratio = cc.flops / cc.model_flops
+    assert 1.0 <= ratio < 1.6, ratio  # attention + logits overhead
+
+
+def test_memcom_train_flops_exceed_lm_train():
+    """The three-stack compressor must cost more than plain LM training
+    on the same tokens (paper §6 training-cost limitation)."""
+    cfg = get_config("smollm-360m")
+    shape = _shape("train_4k")
+    lm = costs.lm_train_cost(cfg, shape)
+    mc = costs.memcom_train_cost(cfg, shape, phase=2)
+    assert mc.flops > lm.flops
+    p1 = costs.memcom_train_cost(cfg, shape, phase=1)
+    assert p1.flops < mc.flops  # phase-1 backprops less
+
+
+def test_decode_is_low_intensity():
+    """32k decode: arithmetic intensity (flops/byte) must be tiny —
+    the memory-bound regime the paper attacks."""
+    cfg = get_config("mistral-nemo-12b")
+    shape = _shape("decode_32k")
+    cc = costs.decode_cost(cfg, shape)
+    intensity = cc.flops / cc.hbm_bytes
+    assert intensity < 10, intensity
+
+
+def test_moe_active_vs_total_params():
+    cfg = get_config("deepseek-v2-236b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert active < total / 5  # 160-expert top-6 ⇒ big sparsity gap
+    dense = get_config("mistral-nemo-12b")
+    assert dense.param_count() == dense.active_param_count()
+
+
+@pytest.mark.parametrize("kind", ["memcom_train", "lm_train", "prefill",
+                                  "decode"])
+def test_cell_cost_positive(kind):
+    cfg = get_config("jamba-1.5-large-398b")
+    shape = _shape("train_4k" if "train" in kind else "decode_32k")
+    cc = costs.cell_cost(cfg, shape, kind)
+    assert cc.flops > 0 and cc.hbm_bytes > 0 and cc.model_flops > 0

@@ -1,0 +1,82 @@
+"""LoRA adapter algebra + misc distributed-substrate units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.lora import init_lora, merge_lora
+from repro.models import transformer as tfm
+from repro.utils.pytree import tree_flatten_with_names
+
+
+def test_lora_targets_only_attention_kernels():
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    lora = init_lora(params, ("wq", "wk"), rank=4, seed=1)
+    names = [n for n, _ in tree_flatten_with_names(lora)]
+    assert names, "no adapters created"
+    assert all("attn" in n for n in names)
+    assert all(n.endswith(("/a", "/b")) for n in names)
+    assert not any("/wv/" in n or "/wo/" in n for n in names)
+
+
+def test_lora_zero_init_is_identity():
+    """b = 0 at init ⇒ merged weights == base weights exactly."""
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    lora = init_lora(params, ("wq", "wk", "wv", "wo"), rank=4, seed=1)
+    merged = merge_lora(params, lora)
+    for (n, a), (_, b) in zip(tree_flatten_with_names(params),
+                              tree_flatten_with_names(merged)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=n)
+
+
+def test_lora_merge_linearity(rng):
+    """merge(w, a, b) == w + (alpha/r)·a@b on every adapted leaf."""
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    lora = init_lora(params, ("wq",), rank=4, seed=1)
+    # randomize b so the delta is nonzero
+    lora = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape) * 0.1, x.dtype),
+        lora)
+    merged = merge_lora(params, lora, alpha=16.0, rank=4)
+    flat_p = dict(tree_flatten_with_names(params))
+    flat_m = dict(tree_flatten_with_names(merged))
+    flat_l = dict(tree_flatten_with_names(lora))
+    adapted = {n.rsplit("/", 1)[0] for n in flat_l}
+    for base in adapted:
+        w = flat_p[base]
+        expect = w + (16.0 / 4) * (flat_l[base + "/a"] @ flat_l[base + "/b"])
+        np.testing.assert_allclose(np.asarray(flat_m[base]),
+                                   np.asarray(expect), atol=1e-5, rtol=1e-5)
+    # non-adapted leaves untouched
+    for n, w in flat_p.items():
+        if n not in {b for b in adapted}:
+            np.testing.assert_array_equal(np.asarray(w),
+                                          np.asarray(flat_m[n]))
+
+
+def test_input_specs_cover_every_objective():
+    """input_specs yields ShapeDtypeStructs (never arrays) for all cells."""
+    from repro.launch.steps import input_specs, default_objective, \
+        shape_by_name
+
+    class _M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # use a tiny real mesh for NamedSharding construction
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("smollm-135m", "whisper-medium", "mamba2-370m"):
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+            spec = input_specs(arch, shape_name, mesh)
+            for leaf in jax.tree.leaves(spec):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+            obj = default_objective(arch, shape_by_name(shape_name))
+            if arch == "mamba2-370m":
+                assert obj in ("lm_train", "prefill", "decode")
+            if arch == "whisper-medium" and shape_name != "decode_32k":
+                assert "frames" in spec

@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import jnp_impl, ref, ops
+from repro.optim import AdamW, ErrorFeedbackInt8, clip_by_global_norm
+
+
+SHORT = settings(max_examples=20, deadline=None)
+
+
+@SHORT
+@given(
+    sq=st.integers(1, 40), skv=st.integers(1, 48),
+    hq_groups=st.integers(1, 3), hkv=st.integers(1, 3),
+    d=st.sampled_from([8, 16, 32]), causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_streaming_equals_dense(sq, skv, hq_groups, hkv, d,
+                                          causal, seed):
+    """Online-softmax streaming == dense softmax for arbitrary shapes."""
+    rng = np.random.default_rng(seed)
+    B, Hq = 1, hq_groups * hkv
+    q = jnp.asarray(rng.standard_normal((B, sq, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, skv, hkv, d)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(sq), (B, sq)).astype(jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(skv), (B, skv)).astype(jnp.int32)
+    dense = ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                              causal=causal)
+    stream = jnp_impl.attention_chunked(
+        q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, kv_chunk=7)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(dense),
+                               atol=3e-5, rtol=3e-5)
+
+
+@SHORT
+@given(
+    m=st.integers(1, 24), t=st.integers(1, 40),
+    d=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1),
+)
+def test_xattn_rows_are_convex_combinations(m, t, d, seed):
+    """Cross-attn output rows lie in the convex hull of V rows: the row
+    max/min of O is bounded by the column max/min of V (softmax weights
+    are a convex combination)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, m, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, t, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, t, d)), jnp.float32)
+    o = ref.memcom_xattn_ref(q, k, v)
+    hi = v.max(axis=1, keepdims=True) + 1e-5
+    lo = v.min(axis=1, keepdims=True) - 1e-5
+    assert bool(jnp.all(o <= hi)) and bool(jnp.all(o >= lo))
+
+
+@SHORT
+@given(
+    s=st.integers(2, 48), h=st.integers(1, 3),
+    p=st.sampled_from([4, 8]), n=st.sampled_from([4, 8]),
+    split=st.floats(0.2, 0.8), seed=st.integers(0, 2**31 - 1),
+)
+def test_ssd_state_handoff_is_exact(s, h, p, n, split, seed):
+    """Running SSD over [a;b] == running over a, handing the state to b —
+    the invariant behind the hybrid (Jamba) MemCom adaptation."""
+    rng = np.random.default_rng(seed)
+    cut = max(1, min(s - 1, int(s * split)))
+    x = jnp.asarray(rng.standard_normal((1, s, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((1, s, h))) * 0.2, jnp.float32)
+    A = -jnp.abs(jnp.asarray(rng.standard_normal(h), jnp.float32))
+    Bm = jnp.asarray(rng.standard_normal((1, s, 1, n)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((1, s, 1, n)) * 0.5, jnp.float32)
+    y_full, hf_full = ref.ssd_ref(x, dt, A, Bm, Cm)
+    _, h_mid = ref.ssd_ref(x[:, :cut], dt[:, :cut], A, Bm[:, :cut], Cm[:, :cut])
+    y_b, hf_b = ref.ssd_ref(x[:, cut:], dt[:, cut:], A, Bm[:, cut:],
+                            Cm[:, cut:], init_state=h_mid)
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_full[:, cut:]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf_b), np.asarray(hf_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+@SHORT
+@given(
+    parts=st.integers(2, 4), skv=st.integers(8, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lse_combine_partition_invariance(parts, skv, seed):
+    """Attention over any partition of the KV set, LSE-merged, equals
+    attention over the whole set (flash-decoding invariant)."""
+    rng = np.random.default_rng(seed)
+    B, S, H, D = 1, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, skv, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, skv, H, D)), jnp.float32)
+    kv_pos = jnp.arange(skv)[None].astype(jnp.int32)
+    q_pos = jnp.full((B, S), skv, jnp.int32)
+    whole = ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True)
+    cuts = sorted(set([0, skv] + list(
+        np.random.default_rng(seed + 1).integers(1, skv, parts - 1))))
+    partials = []
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        o, l = jnp_impl.attention_chunked(
+            q, k[:, lo:hi], v[:, lo:hi], q_pos=q_pos,
+            kv_pos=kv_pos[:, lo:hi], causal=True,
+            kv_chunk=max(hi - lo, 1), return_lse=True)
+        partials.append((o, l))
+    merged = jnp_impl.combine_attention_partials(partials)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(whole),
+                               atol=3e-5, rtol=3e-5)
+
+
+@SHORT
+@given(seed=st.integers(0, 2**31 - 1), clip=st.floats(0.1, 10.0))
+def test_clip_by_global_norm_bound(seed, clip):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((5, 3)) * 10, jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(7) * 10, jnp.float32)}
+    clipped, gnorm = clip_by_global_norm(tree, clip)
+    total = float(jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped))))
+    assert total <= clip * 1.001
+    if float(gnorm) <= clip:  # under the threshold: identity
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@SHORT
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_compression_unbiased_over_steps(seed):
+    """int8 + error feedback: the accumulated applied updates converge to
+    the accumulated true gradients (residual stays bounded)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    comp = ErrorFeedbackInt8()
+    err = comp.init({"g": g})
+    applied = jnp.zeros_like(g)
+    for _ in range(30):
+        compressed, err = comp.compress({"g": g}, err)
+        applied = applied + comp.decompress(compressed)["g"]
+    np.testing.assert_allclose(np.asarray(applied / 30), np.asarray(g),
+                               atol=0.05)
+
+
+@SHORT
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 5))
+def test_adamw_matches_numpy_reference(seed, steps):
+    rng = np.random.default_rng(seed)
+    p0 = rng.standard_normal((6,)).astype(np.float32)
+    gs = [rng.standard_normal((6,)).astype(np.float32) for _ in range(steps)]
+    opt = AdamW(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01)
+    params = {"w": jnp.asarray(p0)}
+    state = opt.init(params)
+    for g in gs:
+        params, state = opt.step(params, {"w": jnp.asarray(g)}, state)
+    # numpy reference
+    m = np.zeros_like(p0); v = np.zeros_like(p0); p = p0.copy()
+    for t, g in enumerate(gs, 1):
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        p = p - 1e-2 * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * p)
+    np.testing.assert_allclose(np.asarray(params["w"]), p, atol=1e-5,
+                               rtol=1e-5)
