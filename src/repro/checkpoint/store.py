@@ -2,8 +2,8 @@
 
 Layout (one directory per checkpoint)::
 
-    <dir>/manifest.msgpack       # treedef paths, shapes, dtypes, shard map, user meta
-    <dir>/shard_00000.bin.zst    # concatenated raw leaf bytes, zstd-compressed
+    <dir>/manifest.msgpack       # treedef paths, shapes, dtypes, shard map, codec, user meta
+    <dir>/shard_00000.bin.zst    # concatenated raw leaf bytes, compressed
 
 Leaves are grouped into ~``shard_bytes`` shards so very large trees write
 many independently-compressible files (on a real cluster each host writes
@@ -12,22 +12,73 @@ and are committed with an atomic rename, so a preempted save can never be
 mistaken for a valid checkpoint.  Loading returns numpy arrays — callers
 ``device_put`` with whatever shardings the *current* mesh wants, which is
 what makes restore elastic (any checkpoint loads onto any mesh size).
+
+Compression codec: ``zstd`` when the optional :mod:`zstandard` package is
+installed, otherwise ``zlib`` (stdlib).  The codec used at save time is
+recorded in the manifest header, so any build can load any checkpoint
+whose codec it has available (``raw`` always works).
 """
 
 from __future__ import annotations
 
 import os
 import shutil
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dependency — zlib fallback keeps the store importable
+    import zstandard
+except ImportError:
+    zstandard = None
 
 from repro.utils.pytree import tree_flatten_with_names
 
 _DTYPE_FIX = {"bfloat16": "bfloat16"}  # ml_dtypes name passthrough
+
+_SHARD_EXT = {"zstd": ".bin.zst", "zlib": ".bin.zz", "raw": ".bin"}
+
+
+def default_codec() -> str:
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def _shard_ext(codec: str) -> str:
+    if codec not in _SHARD_EXT:
+        raise ValueError(f"unknown checkpoint codec {codec!r}; "
+                         f"choose from {sorted(_SHARD_EXT)}")
+    return _SHARD_EXT[codec]
+
+
+def _compress(codec: str, data: bytes, level: int) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise ImportError("codec 'zstd' requires the zstandard package "
+                              "(pip install zstandard)")
+        return zstandard.ZstdCompressor(level=level).compress(data)
+    if codec == "zlib":
+        return zlib.compress(data, level)
+    if codec == "raw":
+        return data
+    raise ValueError(f"unknown checkpoint codec {codec!r}; "
+                     f"choose from {sorted(_SHARD_EXT)}")
+
+
+def _decompress(codec: str, data: bytes) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise ImportError("checkpoint was written with codec 'zstd' but "
+                              "zstandard is not installed (pip install "
+                              "zstandard, or re-save with codec='zlib')")
+        return zstandard.ZstdDecompressor().decompress(data)
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec == "raw":
+        return data
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _to_numpy(x):
@@ -35,7 +86,10 @@ def _to_numpy(x):
 
 
 def save_tree(path: str, tree: Any, meta: Optional[Dict] = None,
-              shard_bytes: int = 64 * 1024 * 1024, level: int = 3) -> None:
+              shard_bytes: int = 64 * 1024 * 1024, level: int = 3,
+              codec: Optional[str] = None) -> None:
+    codec = codec or default_codec()
+    ext = _shard_ext(codec)
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -44,15 +98,14 @@ def save_tree(path: str, tree: Any, meta: Optional[Dict] = None,
     flat = tree_flatten_with_names(tree)
     entries = []
     shard_id, shard_buf, shard_size = 0, [], 0
-    cctx = zstandard.ZstdCompressor(level=level)
 
     def flush():
         nonlocal shard_id, shard_buf, shard_size
         if not shard_buf:
             return
         data = b"".join(shard_buf)
-        with open(os.path.join(tmp, f"shard_{shard_id:05d}.bin.zst"), "wb") as f:
-            f.write(cctx.compress(data))
+        with open(os.path.join(tmp, f"shard_{shard_id:05d}{ext}"), "wb") as f:
+            f.write(_compress(codec, data, level))
         shard_id += 1
         shard_buf, shard_size = [], 0
 
@@ -73,7 +126,8 @@ def save_tree(path: str, tree: Any, meta: Optional[Dict] = None,
             flush()
     flush()
 
-    manifest = {"entries": entries, "meta": meta or {}, "num_shards": shard_id}
+    manifest = {"entries": entries, "meta": meta or {}, "num_shards": shard_id,
+                "codec": codec}
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
     if os.path.exists(path):
@@ -88,14 +142,16 @@ def load_tree(path: str, template: Any = None):
 
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dctx = zstandard.ZstdDecompressor()
+    # pre-codec checkpoints carry no header entry and are always zstd
+    codec = manifest.get("codec", "zstd")
+    ext = _shard_ext(codec)
     shards = {}
     arrays = {}
     for e in manifest["entries"]:
         sid = e["shard"]
         if sid not in shards:
-            with open(os.path.join(path, f"shard_{sid:05d}.bin.zst"), "rb") as f:
-                shards[sid] = dctx.decompress(f.read())
+            with open(os.path.join(path, f"shard_{sid:05d}{ext}"), "rb") as f:
+                shards[sid] = _decompress(codec, f.read())
         raw = shards[sid][e["offset"] : e["offset"] + e["nbytes"]]
         arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(e["shape"])
         arrays[e["name"]] = arr

@@ -15,6 +15,9 @@ the Source-LLM's exact final SSM state instead (DESIGN.md §4).
 
 Training: Phase-1 trains only {memx, mem_tokens}; Phase-2 additionally
 unfreezes {source, memory_llm}.  The target is frozen in both phases.
+
+docs/ARCHITECTURE.md documents this parameter tree, the per-layer O^i
+prefix formats, and the serving-time handoff in one place.
 """
 
 from __future__ import annotations

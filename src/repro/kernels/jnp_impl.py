@@ -178,6 +178,74 @@ def attention_causal_blocked(
     return out
 
 
+def decode_attention_lengths(
+    q, k, v, *, lengths, softcap=0.0, scale=None, kv_chunk=256,
+):
+    """Per-slot length-masked decode attention with unseated-tail skipping.
+
+    ``q`` holds each slot's last ``Sq`` tokens (cache positions
+    ``lengths[b]-Sq .. lengths[b]-1``); ``k``/``v`` are the full fixed-size
+    caches.  Slot ``b`` attends to cache positions ``< lengths[b]`` only, so
+    ragged continuous-batching slots never see each other's unseated tail or
+    stale KV from a previous occupant of the slot.
+
+    KV chunks that start at or beyond ``max(lengths)`` are skipped at
+    runtime via ``lax.cond`` — the cache is allocated at ``max_len`` but a
+    young batch only pays for the chunks it has actually filled.
+    """
+    B, Sq, Hq, Dk = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = Dk**-0.5
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Skv + pad) // kv_chunk
+
+    qh = _gqa_fold(q, Hkv)
+    q_pos = lengths[:, None] - Sq + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    live_end = jnp.max(lengths)  # chunks past this hold no seated KV at all
+
+    def attend(carry, start):
+        acc, m, l = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+        pos = start + jnp.arange(kv_chunk, dtype=jnp.int32)
+        logits = jnp.einsum("bqhgd,bchd->bqhgc", qh, kc).astype(jnp.float32) * scale
+        logits = _apply_softcap(logits, softcap)
+        # pos <= q_pos already bounds pos < lengths[b] (q_pos max = lengths-1)
+        valid = pos[None, None, :] <= q_pos[:, :, None]
+        logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        # exp(NEG_INF - NEG_INF) = 1: re-zero masked slots so a row with no
+        # valid KV yet (lengths[b] < Sq) accumulates l = 0, not kv_chunk
+        p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(v.dtype), vc).astype(jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return acc, m_new, l
+
+    def body(carry, c):
+        start = c * kv_chunk
+        carry = jax.lax.cond(start < live_end, attend,
+                             lambda carry, _start: carry, carry, start)
+        return carry, None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), jnp.arange(n_chunks, dtype=jnp.int32))
+    out = (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q.dtype)
+    return jnp.where((l > 0)[..., None], out, 0).reshape(B, Sq, Hq, Dv)
+
+
 def combine_attention_partials(parts):
     """Exact combination of attention computed over disjoint KV sets.
 

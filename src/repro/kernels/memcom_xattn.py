@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 _VMEM_BUDGET = 12 * 1024 * 1024
 
@@ -126,7 +128,7 @@ def memcom_xattn(q, k, v, *, scale=None, block_m=None, block_t=None,
             pltpu.VMEM((bm, 1), jnp.float32),
             pltpu.VMEM((bm, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY)),
         interpret=interpret,

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc):
     idd = pl.program_id(3)
@@ -78,7 +80,7 @@ def gmm(x, w, *, block_c=128, block_d=512, block_f=512, interpret=False):
         out_specs=pl.BlockSpec((1, bc, bf), lambda e, ic, jf, kd: (e, ic, jf)),
         out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.PARALLEL, pltpu.ARBITRARY)),
         interpret=interpret,

@@ -106,6 +106,42 @@ def self_attention_causal(q, k, v, *, offset=0, softcap=0.0, scale=None,
         q_chunk=q_chunk, kv_chunk=kv_chunk, return_lse=return_lse)
 
 
+def decode_attention(q, k, v, *, lengths, softcap=0.0, scale=None,
+                     impl="auto", kv_chunk=256):
+    """Per-slot length-aware decode attention (continuous batching).
+
+    ``q`` (B, S, Hq, D) holds each slot's last S tokens; ``k``/``v``
+    (B, L, Hkv, D) are the full fixed-size caches; ``lengths`` (B,) int32 is
+    each slot's total valid length *including* the S new tokens.  Slot ``b``
+    attends causally within cache positions ``[0, lengths[b])`` — nothing
+    beyond its own seated prefix + written tokens is visible, so slots with
+    different compressed prefixes and ragged prompts share one batched step.
+
+    The jnp path skips KV chunks beyond ``max(lengths)`` at runtime; the
+    pallas path reuses the flash kernel with per-slot position masks.
+    """
+    B, S = q.shape[:2]
+    small = S * k.shape[1] <= 256 * 256
+    impl = _resolve(impl, small)
+    if impl in ("dense", "pallas"):
+        L = k.shape[1]
+        slot = jnp.arange(L, dtype=jnp.int32)
+        kv_pos = jnp.broadcast_to(slot[None, :], (B, L))
+        q_pos = lengths[:, None] - S + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if impl == "dense":
+            return ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                     causal=True, softcap=softcap, scale=scale)
+        from repro.kernels import flash_attention
+
+        return flash_attention.flash_attention(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+            softcap=softcap, scale=scale,
+            interpret=jax.default_backend() != "tpu")
+    return jnp_impl.decode_attention_lengths(
+        q, k, v, lengths=lengths, softcap=softcap, scale=scale,
+        kv_chunk=kv_chunk)
+
+
 def attention_with_prefix(q, k_self, v_self, k_pre, v_pre, *, pre_pos=None,
                           offset=None, softcap=0.0, scale=None, impl="auto"):
     """Causal self-attention plus a fully-visible KV prefix (MemCom memory).

@@ -1,0 +1,13 @@
+"""Version shim for the Pallas TPU compiler-params class.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across 0.4.x
+releases; every kernel in this package imports the resolved class from
+here so the compatibility logic lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -1,15 +1,19 @@
-"""Production serving launcher: offline compression + compressed-cache
-serving behind one CLI (the paper's cloud-edge deployment, §1).
+"""Production serving launcher: offline compression + continuous-batching
+compressed-cache serving behind one CLI (the paper's cloud-edge
+deployment, §1).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
-        --requests 4 --max-new 8
+        --requests 6 --tasks 2 --slots 4 --max-new 8
 
 Stages:
-  1. "cloud": load/initialize the compressor, compress the many-shot
-     context once, materialize the per-layer compressed KV through the
-     frozen target projections.
-  2. "edge": a ServingEngine seats the compressed cache and serves
-     batched generate/classify requests against m slots per layer.
+  1. "cloud": load/initialize the compressor, compress each ICL task's
+     many-shot context once, materialize the per-layer compressed KV
+     through the frozen target projections, and register it in the
+     engine's PrefixStore.
+  2. "edge": a continuous-batching ServingEngine seats each request's
+     compressed task memory in its own slot and serves ragged
+     generate/classify traffic — more requests than slots is fine,
+     finished slots refill mid-decode.
 
 On a fleet the same entry point runs with the production mesh and
 sharded weights (launch/steps.py `compress` + `decode` objectives are
@@ -30,7 +34,7 @@ from repro.core import memcom
 from repro.data import (ICLTaskSpec, SyntheticVocab, build_manyshot_prompt,
                         make_episode, make_query)
 from repro.models import transformer as tfm
-from repro.serving.engine import ServingEngine, materialize_prefix
+from repro.serving import Request, ServingEngine, materialize_prefix
 from repro.utils.pytree import tree_bytes
 
 
@@ -38,13 +42,18 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--tasks", type=int, default=2,
+                    help="distinct compressed ICL tasks to serve in one batch")
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--context-tokens", type=int, default=96)
     ap.add_argument("--classify", action="store_true",
                     help="serve ICL label queries instead of generation")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args()
+    if args.tasks < 1 or args.slots < 1 or args.requests < 1:
+        ap.error("--tasks, --slots and --requests must all be >= 1")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -55,32 +64,40 @@ def main():
     m = cfg.memcom.num_memory_tokens
 
     print(f"[cloud] target {cfg.name} ({cfg.param_count()/1e6:.1f}M), "
-          f"m={m} memory tokens")
+          f"m={m} memory tokens, {args.tasks} task(s)")
     target = tfm.init_params(cfg, 0)
     compressor = memcom.init_memcom(cfg, target, 1)
 
     rng = np.random.default_rng(0)
-    task = ICLTaskSpec(vocab, num_labels=8, keys_per_label=4)
-    episode = make_episode(task, rng)
-    prompt = build_manyshot_prompt(task, episode, rng,
-                                   budget=args.context_tokens)
-    t0 = time.perf_counter()
-    prefix, _ = memcom.compress(compressor, cfg, jnp.asarray(prompt[None]))
-    kv = materialize_prefix(target, cfg, prefix)
-    t_compress = time.perf_counter() - t0
-    print(f"[cloud] compressed {len(prompt)} tokens -> {m} slots/layer "
-          f"in {t_compress:.2f}s; payload {tree_bytes(kv)/1e3:.1f} KB")
+    engine = ServingEngine(cfg, target, slots=args.slots,
+                           max_len=m + 24 + args.max_new + 16)
 
-    engine = ServingEngine(cfg, target, slots=args.requests,
-                           max_len=m + args.max_new + 16)
-    engine.seat_compressed(kv)
-    metrics = {"arch": cfg.name, "m": m, "context_tokens": len(prompt),
-               "compress_s": t_compress, "payload_bytes": tree_bytes(kv)}
+    tasks, payload = [], 0
+    t0 = time.perf_counter()
+    for t in range(args.tasks):
+        task = ICLTaskSpec(vocab, num_labels=8, keys_per_label=4)
+        episode = make_episode(task, rng)
+        prompt = build_manyshot_prompt(task, episode, rng,
+                                       budget=args.context_tokens)
+        prefix, _ = memcom.compress(compressor, cfg, jnp.asarray(prompt[None]))
+        kv = materialize_prefix(target, cfg, prefix)
+        name = engine.add_prefix(f"task{t}", kv)
+        tasks.append((name, task, episode, prompt))
+        payload += tree_bytes(kv)
+    t_compress = time.perf_counter() - t0
+    print(f"[cloud] compressed {args.tasks}x{args.context_tokens} tokens -> "
+          f"{m} slots/layer each in {t_compress:.2f}s; "
+          f"payload {payload/1e3:.1f} KB total")
+    metrics = {"arch": cfg.name, "m": m, "tasks": args.tasks,
+               "slots": args.slots, "context_tokens": args.context_tokens,
+               "compress_s": t_compress, "payload_bytes": payload}
 
     if args.classify:
         hits = 0
         t0 = time.perf_counter()
-        for _ in range(args.requests):
+        for i in range(args.requests):
+            name, task, episode, prompt = tasks[i % len(tasks)]
+            engine.seat_prefix(0, name)
             q, label = make_query(task, episode, prompt, rng)
             pred = engine.score_labels(np.empty((0,), np.int32), q,
                                        vocab.label_ids())
@@ -89,19 +106,27 @@ def main():
         print(f"[edge] {args.requests} label queries in {dt:.2f}s "
               f"({hits}/{args.requests} correct — untrained compressor "
               f"unless loaded from a checkpoint)")
-        metrics.update(queries=args.requests, correct=hits,
-                       serve_s=dt)
+        metrics.update(queries=args.requests, correct=hits, serve_s=dt)
     else:
-        prompts = rng.integers(4, vocab.size, (args.requests, 8)).astype(
-            np.int32)
+        # ragged prompts, round-robin over tasks, per-request stop budget
+        reqs = [
+            Request(tokens=rng.integers(4, vocab.size,
+                                        int(rng.integers(4, 12))),
+                    max_new=args.max_new, prefix=tasks[i % len(tasks)][0],
+                    stop_token=None)
+            for i in range(args.requests)
+        ]
         t0 = time.perf_counter()
-        out = engine.generate(prompts, max_new=args.max_new)
+        out = engine.serve(reqs)
         dt = time.perf_counter() - t0
-        tok_s = args.requests * out.shape[1] / dt
-        print(f"[edge] generated {out.shape} in {dt:.2f}s "
-              f"({tok_s:.1f} tok/s, attending to {m} slots/layer)")
-        metrics.update(generated=int(out.size), serve_s=dt,
-                       tokens_per_s=tok_s)
+        generated = int(sum(len(v) for v in out.values()))
+        tok_s = generated / dt
+        print(f"[edge] served {args.requests} ragged requests "
+              f"({args.tasks} compressed tasks, {args.slots} slots) in "
+              f"{dt:.2f}s: {generated} tokens, {tok_s:.1f} tok/s, "
+              f"attending to <= {m}+prompt slots/layer per request")
+        metrics.update(requests=args.requests, generated=generated,
+                       serve_s=dt, tokens_per_s=tok_s)
 
     if args.metrics:
         with open(args.metrics, "w") as f:

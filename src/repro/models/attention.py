@@ -66,6 +66,16 @@ def project_kv(p, cfg: ModelConfig, x, positions):
     return k, v
 
 
+def scatter_rows(cache, new, starts):
+    """Write ``new[b]`` into ``cache[b]`` at per-slot offsets ``starts[b]``
+    along the sequence axis — the continuous-batching cache write, where
+    every slot sits at its own ``base_len + tokens_consumed`` position."""
+    def one(c, u, s):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, u.astype(c.dtype), s, axis=0)
+    return jax.vmap(one)(cache, new, starts)
+
+
 def _prefix_kv(p, cfg: ModelConfig, prefix: dict):
     if "k" in prefix:
         return prefix["k"], prefix["v"]
@@ -122,6 +132,16 @@ def apply_attention(
     if decode:
         assert cache is not None and cache_index is not None
         k_new, v_new = project_kv(p, cfg, x, positions)
+        if jnp.ndim(cache_index) == 1:
+            # per-slot lengths (continuous batching): each slot writes at its
+            # own offset and is masked to its own seated region only
+            k_cache = scatter_rows(cache["k"], k_new, cache_index)
+            v_cache = scatter_rows(cache["v"], v_new, cache_index)
+            out = ops.decode_attention(
+                q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                lengths=cache_index + S, softcap=softcap, scale=scale,
+                impl=impl)
+            return out.reshape(B, S, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(

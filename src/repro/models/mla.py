@@ -95,10 +95,17 @@ def apply_mla(
     if decode:  # ---------------- absorbed decode ----------------
         assert cache is not None and cache_index is not None
         ckv_new, kr_new = _latent(p, cfg, x, positions)
-        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_index, axis=1)
-        kr_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr_new[:, :, 0, :].astype(cache["kr"].dtype), cache_index, axis=1)
+        per_slot = jnp.ndim(cache_index) == 1
+        if per_slot:
+            from repro.models.attention import scatter_rows
+
+            ckv_cache = scatter_rows(cache["ckv"], ckv_new, cache_index)
+            kr_cache = scatter_rows(cache["kr"], kr_new[:, :, 0, :], cache_index)
+        else:
+            ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_index, axis=1)
+            kr_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr_new[:, :, 0, :].astype(cache["kr"].dtype), cache_index, axis=1)
         # fold q through W_uk:  q_abs[b,s,h,R] = q_nope . wuk[h]
         wukv = p["wukv"].reshape(m.kv_lora_rank, nh, m.qk_nope_head_dim + m.v_head_dim)
         wuk = wukv[:, :, : m.qk_nope_head_dim]
@@ -106,13 +113,18 @@ def apply_mla(
         q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B,S,nh,R+rd)
         k_eff = jnp.concatenate([ckv_cache, kr_cache], axis=-1)[:, :, None, :]
         v_eff = ckv_cache[:, :, None, :]  # MQA: 1 shared kv head
-        max_len = k_eff.shape[1]
-        slot = jnp.arange(max_len, dtype=jnp.int32)
-        kv_pos = jnp.broadcast_to(jnp.where(slot < cache_index + S, slot, -1), (B, max_len))
-        q_pos = jnp.broadcast_to(cache_index + jnp.arange(S, dtype=jnp.int32), (B, S))
-        o_lat = ops.attention(q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
-                              q_pos=q_pos, kv_pos=kv_pos, causal=True,
-                              scale=scale, impl=impl)  # (B,S,nh,R)
+        if per_slot:
+            o_lat = ops.decode_attention(
+                q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
+                lengths=cache_index + S, scale=scale, impl=impl)
+        else:
+            max_len = k_eff.shape[1]
+            slot = jnp.arange(max_len, dtype=jnp.int32)
+            kv_pos = jnp.broadcast_to(jnp.where(slot < cache_index + S, slot, -1), (B, max_len))
+            q_pos = jnp.broadcast_to(cache_index + jnp.arange(S, dtype=jnp.int32), (B, S))
+            o_lat = ops.attention(q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
+                                  q_pos=q_pos, kv_pos=kv_pos, causal=True,
+                                  scale=scale, impl=impl)  # (B,S,nh,R)
         wuv = wukv[:, :, m.qk_nope_head_dim :]
         out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv)
         return out.reshape(B, S, -1) @ p["wo"], {"ckv": ckv_cache, "kr": kr_cache}

@@ -14,6 +14,9 @@ all share the *Layerwise* layout::
 so the three stacks (which are copies of the same architecture) can
 exchange them directly, and the period part rides through ``jax.lax.scan``
 as xs/ys with a leading ``repeats`` dim.
+
+See docs/ARCHITECTURE.md for the layout's batch-axis conventions and the
+per-layer O^i prefix formats each mixer family exchanges.
 """
 
 from __future__ import annotations
@@ -192,13 +195,24 @@ def forward(
     if cfg.embed_scale:
         h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
     start = cache_index if (decode and cache_index is not None) else mask_offset
-    if cfg.pos_embed == "learned":
-        pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], start, S, axis=0)
-        h = h + pe[None].astype(h.dtype)
-    if positions is None:
-        positions = jnp.broadcast_to(start + jnp.arange(S, dtype=jnp.int32), (B, S))
-        if cfg.mrope_sections:
-            positions = jnp.broadcast_to(positions, (3, B, S))
+    per_slot = decode and cache_index is not None and jnp.ndim(cache_index) == 1
+    if per_slot:
+        # continuous batching: each slot decodes at its own length
+        pos2d = cache_index[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.pos_embed == "learned":
+            h = h + jnp.take(params["embed"]["pos"], pos2d, axis=0).astype(h.dtype)
+        if positions is None:
+            positions = pos2d
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(positions, (3, B, S))
+    else:
+        if cfg.pos_embed == "learned":
+            pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], start, S, axis=0)
+            h = h + pe[None].astype(h.dtype)
+        if positions is None:
+            positions = jnp.broadcast_to(start + jnp.arange(S, dtype=jnp.int32), (B, S))
+            if cfg.mrope_sections:
+                positions = jnp.broadcast_to(positions, (3, B, S))
 
     if cfg.encoder is not None and encoder_frames is not None and encoder_out is None:
         encoder_out = encode(params["encoder"], cfg, encoder_frames, impl=impl,

@@ -1,3 +1,8 @@
 from repro.serving.engine import ServingEngine, materialize_prefix
+from repro.serving.prefix_store import PrefixStore, write_prefix_to_cache
+from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["ServingEngine", "materialize_prefix"]
+__all__ = [
+    "ServingEngine", "PrefixStore", "Request", "Scheduler",
+    "materialize_prefix", "write_prefix_to_cache",
+]

@@ -1,23 +1,34 @@
-"""Batched serving engine over compressed caches.
+"""Continuous-batching serving engine over compressed caches.
 
 Deployment story (paper §1: cloud compresses offline, edge serves):
 
-1. ``core.compress`` produces per-layer O^i once, offline.
-2. ``materialize_prefix`` pushes O^i through the frozen target's K/V
-   (or MLA latent) projections → a compressed KV cache of m slots
-   (mamba layers keep their handed-off state).
-3. ``ServingEngine`` seats the compressed cache in slots [0, m), prefills
-   request tokens after it, and decodes — every step attends to m memory
-   slots instead of t raw context tokens.
+1. ``core.compress`` produces per-layer O^i once, offline, per ICL task.
+2. :func:`~repro.serving.prefix_store.materialize_prefix` pushes O^i
+   through the frozen target's K/V (or MLA latent) projections → a
+   compressed KV cache of m slots (mamba layers keep their handed-off
+   state).  A :class:`~repro.serving.prefix_store.PrefixStore` caches one
+   such prefix per task.
+3. :class:`ServingEngine` runs a fixed pool of batch slots.  Each request
+   names the compressed task memory it wants; the engine seats that
+   prefix into the request's slot, prefills the prompt *behind it*, and
+   decodes.  Slots are fully independent:
 
-The engine keeps fixed batch slots (continuous-batching-lite): requests
-are padded into slots; finished slots are refillable via ``reset_slots``.
+   * **ragged admission** — prompts of any length enter whichever slot is
+     free; prefill is per-slot (padded to a few static buckets, so no
+     recompilation) while decode stays one batched step;
+   * **per-slot masking** — every step attends to that slot's own
+     ``base_len + tokens_consumed`` cache region only (a (slots,) length
+     vector threaded down to :func:`repro.kernels.ops.decode_attention`),
+     so two tasks seated in neighbouring slots can never cross-attend;
+   * **per-slot stop** — a slot finishing (its stop token or its budget)
+     frees immediately and the scheduler refills it mid-decode.
+
+See docs/ARCHITECTURE.md for the cache layout and scheduling design.
 """
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
+from typing import Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,148 +36,285 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import transformer as tfm
-from repro.models.attention import project_kv
-from repro.models.mla import _latent  # shared latent-cache constructor
+from repro.serving.prefix_store import (  # re-exported for compatibility
+    PrefixStore,
+    _map_rowwise,
+    clear_slot_state,
+    materialize_prefix,
+    seat_prefix_row,
+    write_prefix_to_cache,
+)
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = [
+    "ServingEngine", "PrefixStore", "Request", "Scheduler",
+    "materialize_prefix", "write_prefix_to_cache",
+]
 
 
-def materialize_prefix(target_params, cfg: ModelConfig, prefix):
-    """Turn {"h": O^i} entries into precomputed compressed caches:
-    attn -> {"k","v"}; mla -> {"ckv","kr"}; mamba -> passthrough state."""
-
-    def project(desc, layer_params, entry):
-        if "h" not in entry:
-            return entry
-        h = entry["h"]
-        B, m = h.shape[0], h.shape[1]
-        pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (B, m))
-        if cfg.mrope_sections:
-            pos = jnp.broadcast_to(pos, (3, B, m))
-        if desc.mixer == "mla":
-            ckv, kr = _latent(layer_params["attn"], cfg, h, pos)
-            return {"ckv": ckv, "kr": kr[:, :, 0, :]}
-        k, v = project_kv(layer_params["attn"], cfg, h, pos)
-        return {"k": k, "v": v}
-
-    out = {}
-    if "prefix" in prefix:
-        out["prefix"] = [
-            project(desc, target_params[f"prefix_{i}"], prefix["prefix"][i])
-            for i, desc in enumerate(cfg.layout.prefix)
-        ]
-    if "period" in prefix:
-        period = {}
-        for j, desc in enumerate(cfg.layout.period):
-            key = f"l{j}"
-            entry = prefix["period"][key]
-            lp = jax.tree.map(lambda x: x, target_params["period"][key])
-            fn = partial(project, desc)
-            period[key] = jax.vmap(fn)(lp, entry)  # map over stacked layers
-        out["period"] = period
-    return out
+def _slice_slot(cache, slot):
+    """View one batch slot of a Layerwise cache (keeps a size-1 batch dim)."""
+    def f(c, _p, axis):
+        return {k: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis)
+                for k, x in c.items()}
+    return _map_rowwise(cache, None, f)
 
 
-def write_prefix_to_cache(cfg: ModelConfig, cache, prefix):
-    """Seat compressed memory slots at cache positions [0, m)."""
+def _merge_slot(cache, row, slot):
+    """Write a size-1-batch cache back into slot ``slot``."""
+    def f(c, p, axis):
+        return {k: jax.lax.dynamic_update_slice_in_dim(
+            c[k], p[k].astype(c[k].dtype), slot, axis) for k in c}
+    return _map_rowwise(cache, row, f)
 
-    def seat(c, p):
-        c = dict(c)
-        for key in ("k", "v", "ckv", "kr"):
-            if key in p:
-                axis = 1
-                c[key] = jax.lax.dynamic_update_slice_in_dim(
-                    c[key], p[key].astype(c[key].dtype), 0, axis=axis)
-        if "ssm" in p:
-            c["ssm"] = p["ssm"].astype(c["ssm"].dtype)
-        return c
 
-    out = {}
-    if "prefix" in cache:
-        out["prefix"] = [seat(c, p) for c, p in
-                         zip(cache["prefix"], prefix.get("prefix", []))]
-    if "period" in cache:
-        out["period"] = {}
-        for key, c in cache["period"].items():
-            p = prefix.get("period", {}).get(key)
-            if p is None:
-                out["period"][key] = c
-                continue
-            # both stacked on the layer dim: seat per-layer via vmap
-            out["period"][key] = jax.vmap(seat)(c, p)
-    return out
+def _bucket(n: int, cap: int) -> int:
+    """Static prefill widths: next power of two (min 8), clamped to the
+    slot's remaining cache space.  A handful of buckets ⇒ a handful of
+    prefill compilations, ever."""
+    return max(1, min(max(8, 1 << (max(1, n) - 1).bit_length()), cap))
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, target_params, *, slots: int,
-                 max_len: int, impl: str = "auto"):
+                 max_len: int, impl: str = "auto",
+                 prefix_store: Optional[PrefixStore] = None):
         self.cfg = cfg
         self.params = target_params
         self.slots = slots
         self.max_len = max_len
         self.impl = impl
         self.cache = tfm.init_cache(cfg, slots, max_len)
-        self.base_len = 0  # memory-slot count seated at the front
+        self.store = prefix_store if prefix_store is not None else PrefixStore(cfg)
+        self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
+        self.base_len = 0  # batch-wide seat_compressed() compat
+        self._seated: List[Optional[str]] = [None] * slots  # named prefix
+        self._dirty = np.zeros((slots,), bool)  # slot used since seating
+        # recurrent layers can't absorb right-padding (the state would
+        # advance over pad tokens), so prefill exact lengths for them
+        descs = list(cfg.layout.prefix) + list(cfg.layout.period)
+        self._recurrent = any(d.mixer == "mamba" for d in descs)
+        self._pad_prefill = not self._recurrent
 
-        def prefill_fn(params, cache, tokens, start):
+        def prefill_fn(params, cache, tokens, slot, base):
+            row = _slice_slot(cache, slot)
             logits, aux = tfm.forward(
-                params, cfg, tokens=tokens, cache=cache, cache_index=start,
-                mask_offset=start, impl=impl)
-            return logits[:, -1], aux["cache"]
+                params, cfg, tokens=tokens, cache=row, cache_index=base,
+                mask_offset=base, impl=impl)
+            return logits[0], _merge_slot(cache, aux["cache"], slot)
 
-        def decode_fn(params, cache, tok, index):
+        def decode_fn(params, cache, tok, lengths):
             logits, aux = tfm.forward(
-                params, cfg, tokens=tok, cache=cache, cache_index=index,
+                params, cfg, tokens=tok, cache=cache, cache_index=lengths,
                 decode=True, impl=impl)
             return logits[:, -1], aux["cache"]
 
-        # start is static: prefill-continuation slices the seated cache
-        # region with a python int (stable across calls ⇒ no recompiles)
-        self._prefill = jax.jit(prefill_fn, static_argnums=(3,))
-        self._decode = jax.jit(decode_fn)
+        def decode_greedy_fn(params, cache, tok, lengths):
+            logits, new_cache = decode_fn(params, cache, tok, lengths)
+            # argmax on device: ship (slots,) token ids, not (slots, vocab)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
 
-    def seat_compressed(self, prefix_materialized):
-        """Install an offline-compressed many-shot context for all slots."""
+        # base is static: prefill-continuation slices the seated cache
+        # region with a python int (one trace per (bucket, base) pair);
+        # slot and lengths are traced, so admission/refill never recompiles
+        self._prefill = jax.jit(prefill_fn, static_argnums=(4,))
+        self._decode = jax.jit(decode_fn)
+        self._decode_greedy = jax.jit(decode_greedy_fn)
+
+    # ------------------------------------------------------------------
+    # Prefix seating
+    # ------------------------------------------------------------------
+
+    def add_prefix(self, name: str, materialized, batch_index: int = 0) -> str:
+        """Register a materialized compressed prefix under ``name``."""
+        return self.store.put(name, materialized, batch_index)
+
+    def seat_prefix(self, slot: int, name: str) -> None:
+        """Install task ``name``'s compressed memory into one slot."""
+        self.cache = clear_slot_state(self.cache, slot)
+        self.cache = seat_prefix_row(self.cache, self.store.get(name), slot)
+        self.base[slot] = self.store.base_len(name)
+        self._seated[slot] = name
+        self._dirty[slot] = False
+
+    def seat_compressed(self, prefix_materialized) -> None:
+        """Compat: install an offline-compressed context batch-wide (row b
+        of the materialized prefix seats slot b).  Rows are also kept in the
+        PrefixStore so dirtied slots can be re-seated on later serves."""
         self.cache = write_prefix_to_cache(self.cfg, self.cache,
                                            prefix_materialized)
         assert self.cfg.memcom is not None
         self.base_len = self.cfg.memcom.num_memory_tokens
+        self.base[:] = self.base_len
+        for b in range(self.slots):
+            self.store.put(self._COMPAT + str(b), prefix_materialized,
+                           batch_index=b)
+        self._seated = [None] * self.slots
+        self._dirty[:] = False
 
-    def generate(self, prompts: np.ndarray, max_new: int,
-                 temperature: float = 0.0, seed: int = 0,
-                 stop_token: Optional[int] = None) -> np.ndarray:
-        """prompts: (slots, S) right-aligned token batch (no ragged support
-        in this lite engine — pad upstream).  Greedy when temperature=0."""
-        assert prompts.shape[0] == self.slots
-        start = self.base_len
-        logits, self.cache = self._prefill(
-            self.params, self.cache, jnp.asarray(prompts), start)
-        index = start + prompts.shape[1]
-        out = []
-        key = jax.random.key(seed)
-        tok = self._sample(logits, temperature, key)
-        for i in range(max_new):
-            out.append(np.asarray(tok))
-            logits, self.cache = self._decode(
-                self.params, self.cache, tok[:, None], index + i)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, temperature, sub)
-            if stop_token is not None and bool((np.asarray(tok) == stop_token).all()):
-                break
-        return np.stack(out, axis=1)
+    _COMPAT = "__seated_"  # reserved PrefixStore names for seat_compressed
+
+    def _reset_slot(self, slot: int) -> None:
+        """Prepare a slot for a request with no named prefix: restore the
+        engine-wide seated context (seat_compressed) if the slot no longer
+        holds it — a named prefix displaced it, or (recurrent families) a
+        previous occupant advanced its state — else serve context-free."""
+        if self._seated[slot] is None and not \
+                (self._recurrent and self._dirty[slot]):
+            return  # slot content still valid as-is
+        if self._COMPAT + str(slot) in self.store:
+            self.seat_prefix(slot, self._COMPAT + str(slot))
+            self._seated[slot] = None  # engine-wide context, not request-named
+        else:
+            self.cache = clear_slot_state(self.cache, slot)
+            self.base[slot] = 0
+            self._seated[slot] = None
+            self._dirty[slot] = False
+
+    def _restore_slot(self, slot: int) -> None:
+        """Refresh the context a slot already holds (named prefix, or the
+        engine-wide seated one) when its recurrent state may have been
+        advanced by earlier generation — attention KV at [0, m) is never
+        overwritten, so only recurrent families need this."""
+        if not (self._recurrent and self._dirty[slot]):
+            return
+        if self._seated[slot] is not None:
+            self.seat_prefix(slot, self._seated[slot])
+        elif self._COMPAT + str(slot) in self.store:
+            self.seat_prefix(slot, self._COMPAT + str(slot))
+            self._seated[slot] = None
+        else:
+            self.cache = clear_slot_state(self.cache, slot)
+            self._dirty[slot] = False
+
+    # ------------------------------------------------------------------
+    # Continuous-batching serve loop
+    # ------------------------------------------------------------------
+
+    def serve(self, requests: Iterable[Request], *,
+              seed: int = 0) -> Dict[int, np.ndarray]:
+        """Serve a batch of ragged, per-task requests to completion.
+
+        Returns {request.uid: generated tokens}.  Output includes the stop
+        token when one fired.  More requests than slots is fine — finished
+        slots are refilled mid-decode.
+        """
+        sched = Scheduler(self.slots)
+        for req in requests:
+            # no-prefix requests land on either the engine-wide seated base
+            # or a slot reset to 0 — base_len is the worst case
+            base = (self.store.base_len(req.prefix) if req.prefix
+                    else self.base_len)
+            need = base + len(req.tokens) + req.max_new
+            if need > self.max_len:
+                raise ValueError(
+                    f"request {req.uid}: prefix+prompt+max_new={need} "
+                    f"exceeds max_len={self.max_len}")
+            sched.submit(req)
+
+        rng = np.random.default_rng(seed)
+        results: Dict[int, np.ndarray] = {}
+        pending = np.zeros((self.slots,), np.int32)  # next token per slot
+        lengths = self.base.copy()  # per-slot valid cache length
+
+        def _finish(slot):
+            req, toks = sched.finish(slot)
+            results[req.uid] = toks
+
+        while sched.has_work():
+            for slot, req in sched.admit():
+                if req.prefix is not None:
+                    # skip the re-seat when the slot provably still holds
+                    # this prefix (KV region [0, m) is never overwritten;
+                    # only recurrent state can have been advanced)
+                    if self._seated[slot] != req.prefix or self._recurrent:
+                        self.seat_prefix(slot, req.prefix)
+                else:
+                    self._reset_slot(slot)
+                row_logits = self._prefill_slot(slot, req.tokens)
+                lengths[slot] = self.base[slot] + len(req.tokens)
+                tok = self._sample_row(row_logits, req.temperature, rng)
+                pending[slot] = tok
+                if sched.record_token(slot, tok):
+                    _finish(slot)
+            active = sched.active_slots()
+            if not active:
+                continue  # admit the next queued requests (or exit)
+            greedy = all(sched.request_in(s).temperature <= 0 for s in active)
+            step = self._decode_greedy if greedy else self._decode
+            out, self.cache = step(
+                self.params, self.cache, jnp.asarray(pending[:, None]),
+                jnp.asarray(lengths, jnp.int32))
+            # the batched step advances *every* slot's recurrent state
+            # (idle rows included), so all slots are dirty from here on
+            self._dirty[:] = True
+            out = np.asarray(out)  # greedy: (slots,) ids; else full logits
+            for slot in active:
+                lengths[slot] += 1  # the step consumed this slot's token
+                tok = int(out[slot]) if greedy else self._sample_row(
+                    out[slot], sched.request_in(slot).temperature, rng)
+                pending[slot] = tok
+                if sched.record_token(slot, tok):
+                    _finish(slot)
+        return results
+
+    def _prefill_slot(self, slot: int, tokens: np.ndarray,
+                      persist: bool = True) -> np.ndarray:
+        """Prefill one slot's prompt behind its seated prefix; returns the
+        last real token's logits row.  ``persist=False`` leaves the engine
+        cache untouched (one-shot scoring)."""
+        n = len(tokens)
+        base = int(self.base[slot])
+        cap = self.max_len - base
+        assert 0 < n <= cap, (n, cap)
+        width = _bucket(n, cap) if self._pad_prefill else n
+        padded = np.zeros((1, width), np.int32)
+        padded[0, :n] = tokens
+        logits, new_cache = self._prefill(
+            self.params, self.cache, jnp.asarray(padded),
+            jnp.int32(slot), base)
+        if persist:
+            self.cache = new_cache
+            self._dirty[slot] = True
+        return np.asarray(logits[n - 1])
 
     @staticmethod
-    def _sample(logits, temperature, key):
+    def _sample_row(logits_row: np.ndarray, temperature: float,
+                    rng: np.random.Generator) -> int:
         if temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(rng.choice(len(p), p=p / p.sum()))
+
+    # ------------------------------------------------------------------
+    # Compat APIs (lock-step batch generation, label scoring)
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts, max_new: int, temperature: float = 0.0,
+                 seed: int = 0, stop_token: Optional[int] = None) -> np.ndarray:
+        """Batch-generate over the slot pool.  ``prompts`` is a (slots, S)
+        array or a list of ragged 1-D token arrays (one per slot).  Returns
+        a (slots, n) array; with a stop token, slots now terminate
+        *independently* and shorter rows are right-padded with the stop
+        token."""
+        rows: List[np.ndarray] = [np.asarray(p, np.int32) for p in prompts]
+        assert len(rows) == self.slots, (len(rows), self.slots)
+        reqs = [Request(tokens=r, max_new=max_new, stop_token=stop_token,
+                        temperature=temperature) for r in rows]
+        results = self.serve(reqs, seed=seed)
+        outs = [results[r.uid] for r in reqs]
+        n = max(len(o) for o in outs)
+        fill = stop_token if stop_token is not None else 0
+        return np.stack([np.pad(o, (0, n - len(o)), constant_values=fill)
+                         for o in outs])
 
     def score_labels(self, context: np.ndarray, query: np.ndarray,
                      label_ids: np.ndarray) -> int:
         """Constrained classification: argmax over label token ids for the
         next token after [compressed prefix; context; query]."""
-        toks = np.concatenate([context, query])[None]
-        toks = np.repeat(toks, self.slots, axis=0)
-        start = self.base_len
-        logits, _ = self._prefill(self.params, self.cache,
-                                  jnp.asarray(toks), start)
-        row = np.asarray(logits[0])
+        toks = np.concatenate([context, query]).astype(np.int32)
+        self._restore_slot(0)  # refresh stale recurrent state, keep context
+        row = self._prefill_slot(0, toks, persist=False)  # stateless scoring
         return int(label_ids[np.argmax(row[label_ids])])

@@ -1,0 +1,230 @@
+"""Materialized compressed prefixes: projection, storage, per-slot seating.
+
+The compress → serve handoff (paper §1) in three steps:
+
+1. :func:`materialize_prefix` pushes the compressor's per-layer output
+   O^i through the frozen target's projections, yielding the layer-family
+   cache entries (``attn → k/v``, ``mla → ckv/kr``, ``mamba → ssm``
+   passthrough; see docs/ARCHITECTURE.md for the exact shapes).
+2. :class:`PrefixStore` caches one materialized prefix per ICL task — the
+   "many users, each with their own compressed task memory" serving shape.
+3. :func:`seat_prefix_row` installs a stored prefix into *one batch slot*
+   of a live engine cache, so different slots of the same decode batch can
+   serve different tasks (:func:`write_prefix_to_cache` is the batch-wide
+   variant kept for single-task serving and parity tests).
+
+Layer caches use the Layerwise layout (``{"prefix": [...], "period":
+{"l0": stacked, ...}}``); prefix-section leaves carry the batch on axis 0,
+period-section leaves on axis 1 (axis 0 is the scan's ``repeats`` dim).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.attention import project_kv
+from repro.models.mla import _latent  # shared latent-cache constructor
+
+_KV_KEYS = ("k", "v", "ckv", "kr")
+
+
+def materialize_prefix(target_params, cfg: ModelConfig, prefix):
+    """Turn {"h": O^i} entries into precomputed compressed caches:
+    attn -> {"k","v"}; mla -> {"ckv","kr"}; mamba -> passthrough state."""
+
+    def project(desc, layer_params, entry):
+        if "h" not in entry:
+            return entry
+        h = entry["h"]
+        B, m = h.shape[0], h.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (B, m))
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos, (3, B, m))
+        if desc.mixer == "mla":
+            ckv, kr = _latent(layer_params["attn"], cfg, h, pos)
+            return {"ckv": ckv, "kr": kr[:, :, 0, :]}
+        k, v = project_kv(layer_params["attn"], cfg, h, pos)
+        return {"k": k, "v": v}
+
+    out = {}
+    if "prefix" in prefix:
+        out["prefix"] = [
+            project(desc, target_params[f"prefix_{i}"], prefix["prefix"][i])
+            for i, desc in enumerate(cfg.layout.prefix)
+        ]
+    if "period" in prefix:
+        period = {}
+        for j, desc in enumerate(cfg.layout.period):
+            key = f"l{j}"
+            entry = prefix["period"][key]
+            lp = jax.tree.map(lambda x: x, target_params["period"][key])
+            fn = partial(project, desc)
+            period[key] = jax.vmap(fn)(lp, entry)  # map over stacked layers
+        out["period"] = period
+    return out
+
+
+def write_prefix_to_cache(cfg: ModelConfig, cache, prefix):
+    """Seat compressed memory slots at cache positions [0, m) — batch-wide
+    (row b of the materialized prefix lands in slot b)."""
+
+    def seat(c, p):
+        c = dict(c)
+        for key in _KV_KEYS:
+            if key in p:
+                c[key] = jax.lax.dynamic_update_slice_in_dim(
+                    c[key], p[key].astype(c[key].dtype), 0, axis=1)
+        if "ssm" in p:
+            c["ssm"] = p["ssm"].astype(c["ssm"].dtype)
+        return c
+
+    out = {}
+    if "prefix" in cache:
+        out["prefix"] = [seat(c, p) for c, p in
+                         zip(cache["prefix"], prefix.get("prefix", []))]
+    if "period" in cache:
+        out["period"] = {}
+        for key, c in cache["period"].items():
+            p = prefix.get("period", {}).get(key)
+            if p is None:
+                out["period"][key] = c
+                continue
+            # both stacked on the layer dim: seat per-layer via vmap
+            out["period"][key] = jax.vmap(seat)(c, p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-slot seating
+# ---------------------------------------------------------------------------
+
+
+def _map_rowwise(cache, other, fn):
+    """Apply ``fn(cache_entry, other_entry, batch_axis)`` across both
+    Layerwise sections (batch axis 0 for prefix entries, 1 for period)."""
+    out = {}
+    if "prefix" in cache:
+        out["prefix"] = [
+            fn(c, other["prefix"][i] if other else None, 0)
+            for i, c in enumerate(cache["prefix"])
+        ]
+    if "period" in cache:
+        out["period"] = {
+            key: fn(c, (other or {}).get("period", {}).get(key), 1)
+            for key, c in cache["period"].items()
+        }
+    return out
+
+
+def clear_slot_state(cache, slot: int):
+    """Zero one slot's recurrent state (mamba conv/ssm) ahead of a refill.
+
+    KV entries don't need clearing — stale keys beyond a slot's length are
+    masked by the per-slot decode path — but SSM/conv prefill *continues*
+    from the cached state, so a refilled slot must not inherit its previous
+    occupant's recurrence.
+    """
+
+    def clear(c, _p, axis):
+        c = dict(c)
+        for key in ("conv", "ssm"):
+            if key in c:
+                idx = (slot,) if axis == 0 else (slice(None), slot)
+                c[key] = c[key].at[idx].set(0)
+        return c
+
+    return _map_rowwise(cache, None, clear)
+
+
+def seat_prefix_row(cache, row, slot: int):
+    """Install a single-task prefix (one :class:`PrefixStore` entry) into
+    batch slot ``slot`` of a live cache: KV entries land at positions
+    [0, m) of that slot's rows; SSM state replaces the slot's state."""
+
+    def seat(c, p, axis):
+        if p is None:
+            return c
+        c = dict(c)
+        for key in _KV_KEYS:
+            if key in p:
+                # batch-free row leaves put m where the cache keeps batch
+                m = p[key].shape[axis]
+                idx = (slot, slice(0, m)) if axis == 0 else \
+                    (slice(None), slot, slice(0, m))
+                c[key] = c[key].at[idx].set(p[key].astype(c[key].dtype))
+        if "ssm" in p:
+            idx = (slot,) if axis == 0 else (slice(None), slot)
+            c["ssm"] = c["ssm"].at[idx].set(p["ssm"].astype(c["ssm"].dtype))
+        return c
+
+    return _map_rowwise(cache, row, seat)
+
+
+class PrefixStore:
+    """In-memory cache of materialized compressed prefixes, one per task.
+
+    Entries are stored batch-free (a single task's per-layer cache rows);
+    :meth:`put` extracts one batch row from a :func:`materialize_prefix`
+    output, and engines seat entries into individual slots via
+    :func:`seat_prefix_row`.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._entries: Dict[str, dict] = {}
+        self._base_len: Dict[str, int] = {}
+
+    def put(self, name: str, materialized, batch_index: int = 0) -> str:
+        def take_row(c, _p, axis):
+            out = {}
+            for key, x in c.items():
+                out[key] = x[batch_index] if axis == 0 else x[:, batch_index]
+            return out
+
+        row = _map_rowwise(materialized, None, take_row)
+        self._entries[name] = row
+        self._base_len[name] = _row_base_len(row)
+        return name
+
+    def get(self, name: str) -> dict:
+        self._check(name)
+        return self._entries[name]
+
+    def base_len(self, name: str) -> int:
+        """Memory-slot count the prefix occupies at the cache front
+        (0 for pure state handoff, e.g. mamba-only prefixes)."""
+        self._check(name)
+        return self._base_len[name]
+
+    def _check(self, name: str) -> None:
+        if name not in self._entries:
+            raise KeyError(f"unknown prefix {name!r}; registered: "
+                           f"{sorted(self._entries) or '(none)'}")
+
+    def __contains__(self, name) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def names(self):
+        return tuple(self._entries)
+
+
+def _row_base_len(row) -> int:
+    """Slot count of a batch-free prefix row: the m dim of its first KV
+    leaf (prefix-section KV leaves are (m, ...); period (repeats, m, ...))."""
+    for e in row.get("prefix", []):
+        for key in _KV_KEYS:
+            if key in e:
+                return int(e[key].shape[0])
+    for e in row.get("period", {}).values():
+        for key in _KV_KEYS:
+            if key in e:
+                return int(e[key].shape[1])
+    return 0

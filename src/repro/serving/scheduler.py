@@ -1,0 +1,122 @@
+"""Request queue and slot bookkeeping for the continuous-batching engine.
+
+Pure-python control plane, deliberately free of jax: the
+:class:`~repro.serving.engine.ServingEngine` owns the device arrays and
+asks the scheduler three questions each step — which queued requests fit
+into free slots (:meth:`Scheduler.admit`), which slots are mid-generation
+(:meth:`Scheduler.active_slots`), and whether a freshly sampled token
+finishes its slot (:meth:`Scheduler.record_token`: per-slot stop token or
+per-slot token budget, *independently* of every other slot).
+
+Finished slots return to the free pool immediately, so the next queued
+request is admitted mid-decode — no drain barrier, no recompilation (the
+decode step's shapes never change; only the per-slot length vector does).
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+_UIDS = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``prefix``: optional :class:`~repro.serving.prefix_store.PrefixStore`
+    entry name — the compressed many-shot task memory this request attends
+    to.  Requests with different prefixes batch together; each is seated
+    per slot.
+    """
+
+    tokens: np.ndarray                 # (S,) int32 prompt
+    max_new: int
+    prefix: Optional[str] = None       # PrefixStore entry name
+    stop_token: Optional[int] = None
+    temperature: float = 0.0
+    uid: int = field(default_factory=lambda: next(_UIDS))
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError("prompt must contain at least one token")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+
+@dataclass
+class _SlotState:
+    request: Request
+    emitted: List[int] = field(default_factory=list)
+
+
+class Scheduler:
+    """Admits ragged requests into a fixed pool of batch slots."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._queue: deque[Request] = deque()
+        self._slots: List[Optional[_SlotState]] = [None] * num_slots
+
+    # ---- queue side ----
+
+    def submit(self, request: Request) -> int:
+        self._queue.append(request)
+        return request.uid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    # ---- slot side ----
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def request_in(self, slot: int) -> Request:
+        state = self._slots[slot]
+        assert state is not None, f"slot {slot} is free"
+        return state.request
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Seat queued requests into free slots (FIFO). Returns the
+        (slot, request) pairs admitted this call."""
+        seated = []
+        for slot in self.free_slots():
+            if not self._queue:
+                break
+            req = self._queue.popleft()
+            self._slots[slot] = _SlotState(req)
+            seated.append((slot, req))
+        return seated
+
+    def record_token(self, slot: int, token: int) -> bool:
+        """Append a sampled token to a slot's output. Returns True when the
+        slot just finished — its own stop token or its own budget; other
+        slots are unaffected."""
+        state = self._slots[slot]
+        assert state is not None, f"slot {slot} is free"
+        state.emitted.append(int(token))
+        req = state.request
+        if req.stop_token is not None and int(token) == req.stop_token:
+            return True
+        return len(state.emitted) >= req.max_new
+
+    def finish(self, slot: int) -> Tuple[Request, np.ndarray]:
+        """Release a slot, returning (request, generated tokens)."""
+        state = self._slots[slot]
+        assert state is not None, f"slot {slot} is free"
+        self._slots[slot] = None
+        return state.request, np.asarray(state.emitted, np.int32)

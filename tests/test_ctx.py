@@ -38,9 +38,12 @@ def test_act_sharding_context_restores():
     sh = NamedSharding(mesh, P("data", None, None))
     x = jnp.zeros((2, 4, 8))
     with ctx.act_sharding(sh):
-        y = ctx.constrain(x)
-        assert y is not x  # constraint applied
-        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+        # eager with_sharding_constraint may return its input unchanged on a
+        # trivial mesh, so check the traced program instead of object identity
+        jaxpr = str(jax.make_jaxpr(ctx.constrain)(x))
+        assert "sharding_constraint" in jaxpr  # constraint applied
+        np.testing.assert_array_equal(np.asarray(ctx.constrain(x)),
+                                      np.asarray(x))
     assert ctx.constrain(x) is x  # restored
 
 

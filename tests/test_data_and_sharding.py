@@ -111,7 +111,8 @@ def test_spec_for_no_axis_reuse():
 def test_fsdp_rules_shard_embed_over_data():
     mesh = _StubMesh()
     spec = spec_for((32, 32), ("embed", "heads"), mesh, FSDP_RULES)
-    assert spec == P(("data",), "model")
+    # newer jax canonicalizes singleton axis tuples to bare names
+    assert spec in (P(("data",), "model"), P("data", "model"))
 
 
 def test_granite_oddballs_drop_to_replication():
@@ -120,9 +121,9 @@ def test_granite_oddballs_drop_to_replication():
     mesh = _StubMesh()
     spec = spec_for((40, 1536, 512), ("expert", "embed", "ff"), mesh,
                     FSDP_RULES)
-    assert spec == P(None, ("data",), "model")
+    assert spec in (P(None, ("data",), "model"), P(None, "data", "model"))
     spec = spec_for((49155, 1536), ("vocab", "embed"), mesh, FSDP_RULES)
-    assert spec == P(None, ("data",))
+    assert spec in (P(None, ("data",)), P(None, "data"))
 
 
 MINI_DRYRUN = textwrap.dedent("""
@@ -160,6 +161,8 @@ MINI_DRYRUN = textwrap.dedent("""
     with act_sharding(act_sharding_for(mesh, cfg, 8, 32)):
         compiled = jax.jit(step, donate_argnums=(0, 1)).lower(*args).compile()
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returned [dict]
+        ca = ca[0] if ca else {}
     print(json.dumps({"ok": True, "flops": float(ca.get("flops", -1))}))
 """)
 

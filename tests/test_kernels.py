@@ -134,6 +134,62 @@ def test_lse_merge_matches_monolithic(rng):
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("S", [1, 3])
+@pytest.mark.parametrize("impl", ["dense", "jnp", "pallas"])
+def test_decode_attention_per_slot_lengths(rng, impl, S):
+    """Continuous-batching decode: slot b sees exactly cache[:lengths[b]],
+    whatever the other slots' lengths, on every backend."""
+    B, L, Hq, Hkv, D = 4, 53, 6, 2, 32
+    q = _rand(rng, B, S, Hq, D)
+    k = _rand(rng, B, L, Hkv, D)
+    v = _rand(rng, B, L, Hkv, D)
+    lengths = jnp.asarray([S, 17, 40, 53], jnp.int32)  # ragged, incl. edges
+    slot = jnp.arange(L, dtype=jnp.int32)
+    kv_pos = jnp.where(slot[None] < lengths[:, None], slot[None], -1)
+    q_pos = lengths[:, None] - S + jnp.arange(S, dtype=jnp.int32)[None]
+    want = ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True)
+    got = ops.decode_attention(q, k, v, lengths=lengths, impl=impl,
+                               kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ignores_unseated_tail(rng):
+    """Garbage beyond each slot's length must not leak into the output —
+    the per-slot masking the serving engine relies on for slot isolation."""
+    B, L, Hq, Hkv, D = 2, 48, 4, 2, 16
+    q = _rand(rng, B, 1, Hq, D)
+    k = _rand(rng, B, L, Hkv, D)
+    v = _rand(rng, B, L, Hkv, D)
+    lengths = jnp.asarray([9, 21], jnp.int32)
+    base = ops.decode_attention(q, k, v, lengths=lengths, impl="jnp",
+                                kv_chunk=8)
+    mask = (jnp.arange(L)[None, :, None, None] >= lengths[:, None, None, None])
+    k2 = jnp.where(mask, 1e3, k)  # blow up the unseated tail
+    v2 = jnp.where(mask, -1e3, v)
+    poisoned = ops.decode_attention(q, k2, v2, lengths=lengths, impl="jnp",
+                                    kv_chunk=8)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))
+
+
+def test_decode_attention_empty_slot_is_zero(rng):
+    """A slot with no valid KV (lengths=0) returns zeros like the oracle,
+    not a uniform average of garbage values."""
+    q = _rand(rng, 2, 1, 4, 16)
+    k = _rand(rng, 2, 24, 2, 16)
+    v = _rand(rng, 2, 24, 2, 16)
+    lengths = jnp.asarray([0, 5], jnp.int32)
+    out = ops.decode_attention(q, k, v, lengths=lengths, impl="jnp",
+                               kv_chunk=8)
+    assert np.all(np.asarray(out)[0] == 0)
+    kv_pos = jnp.where(jnp.arange(24)[None] < lengths[:, None],
+                       jnp.arange(24)[None], -1).astype(jnp.int32)
+    want = ref.attention_ref(q, k, v, q_pos=lengths[:, None] - 1,
+                             kv_pos=kv_pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # memcom cross-attention
 # ---------------------------------------------------------------------------

@@ -1,0 +1,64 @@
+"""Scheduler unit tests: FIFO admission, per-slot termination, refill."""
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import Request, Scheduler
+
+
+def _req(n=4, **kw):
+    kw.setdefault("max_new", 3)
+    return Request(tokens=np.arange(n, dtype=np.int32), **kw)
+
+
+def test_fifo_admission_into_free_slots():
+    s = Scheduler(2)
+    r1, r2, r3 = _req(), _req(), _req()
+    for r in (r1, r2, r3):
+        s.submit(r)
+    seated = s.admit()
+    assert [(slot, r.uid) for slot, r in seated] == [(0, r1.uid), (1, r2.uid)]
+    assert s.pending == 1 and s.free_slots() == []
+    assert s.admit() == []  # no free slot -> nothing admitted
+
+
+def test_per_slot_budget_and_stop_token():
+    s = Scheduler(2)
+    a = _req(max_new=2)
+    b = _req(max_new=10, stop_token=99)
+    s.submit(a), s.submit(b)
+    s.admit()
+    # slot 0 finishes by budget; slot 1 keeps going past it
+    assert s.record_token(0, 7) is False
+    assert s.record_token(1, 7) is False
+    assert s.record_token(0, 8) is True
+    assert s.record_token(1, 8) is False
+    req, toks = s.finish(0)
+    assert req.uid == a.uid
+    np.testing.assert_array_equal(toks, [7, 8])
+    # slot 1 finishes by its own stop token, which is included in output
+    assert s.record_token(1, 99) is True
+    _, toks = s.finish(1)
+    np.testing.assert_array_equal(toks, [7, 8, 99])
+
+
+def test_refill_after_finish():
+    s = Scheduler(1)
+    a, b = _req(max_new=1), _req(max_new=1)
+    s.submit(a), s.submit(b)
+    assert [slot for slot, _ in s.admit()] == [0]
+    s.record_token(0, 1)
+    s.finish(0)
+    seated = s.admit()  # freed slot picks up the queued request
+    assert [(slot, r.uid) for slot, r in seated] == [(0, b.uid)]
+    assert s.has_work()
+    s.record_token(0, 2)
+    s.finish(0)
+    assert not s.has_work()
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(tokens=np.arange(3), max_new=0)
+    r = Request(tokens=[[1, 2, 3]], max_new=1)  # flattened + int32
+    assert r.tokens.dtype == np.int32 and r.tokens.shape == (3,)

@@ -1,5 +1,6 @@
 """Serving engine tests: compressed-cache seating, generation parity,
-slot batching."""
+continuous batching (ragged admission, per-slot stop, prefix isolation,
+mid-stream slot refill)."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import memcom
 from repro.models import transformer as tfm
+from repro.serving import Request
 from repro.serving.engine import (
     ServingEngine, materialize_prefix, write_prefix_to_cache,
 )
@@ -78,6 +80,195 @@ def test_engine_seat_compressed(setup, rng):
     out = eng.generate(prompts, max_new=3)
     assert out.shape == (B, 3)
     assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+def _greedy_reference(cfg, params, prompt, max_new):
+    """Token-by-token argmax over an uncached full forward (one row)."""
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    out = []
+    for _ in range(max_new):
+        logits, _ = tfm.forward(params, cfg, tokens=toks)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out.append(int(nxt[0]))
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    return np.asarray(out, np.int32)
+
+
+def test_ragged_prompt_parity(setup, rng):
+    """Ragged prompts batched into one engine == per-row full forward:
+    per-slot lengths mask each slot to its own tokens only."""
+    cfg, params, _ = setup
+    lens, new = (5, 11, 8), 4
+    prompts = [rng.integers(4, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    eng = ServingEngine(cfg, params, slots=3, max_len=32)
+    out = eng.serve([Request(tokens=p, max_new=new) for p in prompts])
+    assert len(out) == 3
+    for uid, p in zip(sorted(out), prompts):
+        np.testing.assert_array_equal(
+            out[uid], _greedy_reference(cfg, params, p, new))
+
+
+def test_per_slot_stop_tokens(setup, rng):
+    """A slot hitting its stop token terminates alone; the other slots'
+    continuations are unchanged (the old engine only stopped when *all*
+    slots emitted the stop token)."""
+    cfg, params, _ = setup
+    prompts = [rng.integers(4, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9)]
+    eng = ServingEngine(cfg, params, slots=2, max_len=40)
+    free = eng.serve([Request(tokens=p, max_new=6) for p in prompts])
+    free = [free[uid] for uid in sorted(free)]
+
+    # choose a stop token that fires mid-stream for slot 0 only
+    stop = int(free[0][2])
+    if stop in free[1]:
+        pytest.skip("degenerate draw: stop token appears in both slots")
+    eng2 = ServingEngine(cfg, params, slots=2, max_len=40)
+    out = eng2.serve([Request(tokens=p, max_new=6, stop_token=stop)
+                      for p in prompts])
+    out = [out[uid] for uid in sorted(out)]
+    # slot 0 stops right after emitting `stop` (inclusive) ...
+    np.testing.assert_array_equal(out[0], free[0][:3])
+    # ... while slot 1 runs its full budget, unperturbed
+    np.testing.assert_array_equal(out[1], free[1])
+
+
+def test_per_slot_prefix_isolation(setup, rng):
+    """Two tasks seated in different slots of one batch: each slot's output
+    equals a solo engine serving only that task — no cross-attention."""
+    cfg, params, mc = setup
+    m = cfg.memcom.num_memory_tokens
+    srcs = [jnp.asarray(rng.integers(4, cfg.vocab_size, (1, 40)), jnp.int32)
+            for _ in range(2)]
+    mats = [materialize_prefix(params, cfg, memcom.compress(mc, cfg, s)[0])
+            for s in srcs]
+    prompt = rng.integers(4, cfg.vocab_size, 7).astype(np.int32)
+
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24)
+    eng.add_prefix("taskA", mats[0])
+    eng.add_prefix("taskB", mats[1])
+    reqs = [Request(tokens=prompt, max_new=5, prefix=name)
+            for name in ("taskA", "taskB")]
+    both = eng.serve(reqs)
+
+    for name, mat, req in zip(("taskA", "taskB"), mats, reqs):
+        solo = ServingEngine(cfg, params, slots=1, max_len=m + 24)
+        solo.add_prefix(name, mat)
+        ref_out = solo.serve([Request(tokens=prompt, max_new=5, prefix=name)])
+        np.testing.assert_array_equal(both[req.uid],
+                                      next(iter(ref_out.values())))
+
+
+def test_slot_refill_mid_stream(setup, rng):
+    """More requests than slots: a finished slot admits the next queued
+    request mid-decode, and every request's output matches a solo run."""
+    cfg, params, mc = setup
+    m = cfg.memcom.num_memory_tokens
+    src = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, 40)), jnp.int32)
+    mat = materialize_prefix(params, cfg, memcom.compress(mc, cfg, src)[0])
+
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 32)
+    eng.add_prefix("task", mat)
+    reqs = [
+        Request(tokens=rng.integers(4, cfg.vocab_size, 4).astype(np.int32),
+                max_new=2, prefix="task"),          # finishes first -> frees
+        Request(tokens=rng.integers(4, cfg.vocab_size, 6).astype(np.int32),
+                max_new=7, prefix="task"),          # keeps its slot busy
+        Request(tokens=rng.integers(4, cfg.vocab_size, 5).astype(np.int32),
+                max_new=3, prefix="task"),          # admitted mid-stream
+    ]
+    out = eng.serve(reqs)
+    assert sorted(len(out[r.uid]) for r in reqs) == [2, 3, 7]
+    for r in reqs:
+        solo = ServingEngine(cfg, params, slots=1, max_len=m + 32)
+        solo.add_prefix("task", mat)
+        ref_out = solo.serve([Request(tokens=r.tokens, max_new=r.max_new,
+                                      prefix="task")])
+        np.testing.assert_array_equal(out[r.uid],
+                                      next(iter(ref_out.values())))
+
+
+def test_recurrent_refill_without_prefix_is_context_free(rng):
+    """A no-prefix request refilled into a used slot of a recurrent model
+    must not continue the previous occupant's SSM state."""
+    cfg = get_smoke_config("mamba2-370m")
+    params = tfm.init_params(cfg, 0)
+    p1 = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    p2 = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=1, max_len=32)
+    out = eng.serve([Request(tokens=p1, max_new=3),
+                     Request(tokens=p2, max_new=3)])
+    fresh = ServingEngine(cfg, params, slots=1, max_len=32)
+    want = fresh.serve([Request(tokens=p2, max_new=3)])
+    np.testing.assert_array_equal(list(out.values())[1],
+                                  list(want.values())[0])
+
+
+def test_recurrent_idle_slot_not_polluted_across_serves(rng):
+    """The batched decode step advances *every* slot's recurrent state,
+    idle ones included — a later admission into a slot that merely sat
+    idle must still start from clean state."""
+    cfg = get_smoke_config("mamba2-370m")
+    params = tfm.init_params(cfg, 0)
+    p1 = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    p2 = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng.serve([Request(tokens=p1, max_new=3)])  # slot 1 idles through decode
+    out = eng.serve([Request(tokens=p1, max_new=3),
+                     Request(tokens=p2, max_new=3)])
+    fresh = ServingEngine(cfg, params, slots=2, max_len=32)
+    want = fresh.serve([Request(tokens=p1, max_new=3),
+                        Request(tokens=p2, max_new=3)])
+    for got, exp in zip(sorted(out), sorted(want)):
+        np.testing.assert_array_equal(out[got], want[exp])
+
+
+def test_hybrid_refill_clears_recurrent_state(rng):
+    """Hybrid (mamba+attn) slot refill: a refilled slot must not inherit
+    the previous occupant's SSM/conv state — identical requests served
+    before and after a slot turnover produce identical tokens."""
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    m = cfg.memcom.num_memory_tokens
+    mats = []
+    for _ in range(2):
+        src = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, 24)), jnp.int32)
+        mats.append(materialize_prefix(params, cfg,
+                                       memcom.compress(mc, cfg, src)[0]))
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24)
+    eng.add_prefix("A", mats[0])
+    eng.add_prefix("B", mats[1])
+    prompt = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    reqs = [Request(tokens=prompt, max_new=3, prefix="A"),
+            Request(tokens=prompt, max_new=3, prefix="B"),
+            Request(tokens=prompt, max_new=3, prefix="A")]  # refills a slot
+    out = eng.serve(reqs)
+    np.testing.assert_array_equal(out[reqs[0].uid], out[reqs[2].uid])
+
+
+def test_seat_compressed_survives_re_serve(rng):
+    """seat_compressed context is restored for later serves even on a
+    recurrent/hybrid model whose slot states were advanced by the first
+    generation (rows are kept in the PrefixStore and re-seated)."""
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    src = jnp.asarray(rng.integers(4, cfg.vocab_size, (2, 24)), jnp.int32)
+    kv = materialize_prefix(params, cfg, memcom.compress(mc, cfg, src)[0])
+    m = cfg.memcom.num_memory_tokens
+    prompts = rng.integers(4, cfg.vocab_size, (2, 5)).astype(np.int32)
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24)
+    eng.seat_compressed(kv)
+    first = eng.generate(prompts, max_new=4)
+    second = eng.generate(prompts, max_new=4)
+    np.testing.assert_array_equal(first, second)
 
 
 def test_mamba_state_snapshot_serving(rng):
