@@ -80,12 +80,13 @@ def run(ratio: int = 8, decode_steps: int = 16):
           f"(structural, transfers to TPU)\n")
 
     cb = run_continuous_batching(cfg0, target, mc, m, rng)
+    pvd = run_paged_vs_dense(cfg0, target, mc, m, rng)
 
     C.write_result("serving_bench", {
         "ratio": ratio, "m": m, "t": t,
         "ms_full": sec_full * 1e3, "ms_compressed": sec_comp * 1e3,
         "cache_bytes_full": bytes_full, "cache_bytes_compressed": bytes_comp,
-        "continuous_batching": cb})
+        "continuous_batching": cb, "paged_vs_dense": pvd})
     return rows
 
 
@@ -128,6 +129,102 @@ def run_continuous_batching(cfg, target, mc, m, rng, *, slots=4,
     return {"requests": num_requests, "tasks": 2, "slots": slots,
             "generated": generated, "serve_s": dt,
             "tokens_per_s": generated / dt}
+
+
+def _kv_leaf_bytes(cache):
+    """Total bytes of the attention/MLA KV leaves of a Layerwise cache."""
+    from repro.serving.prefix_store import _KV_KEYS
+
+    total = 0
+    for entry in cache.get("prefix", []):
+        for key in _KV_KEYS:
+            if key in entry:
+                total += entry[key].size * entry[key].dtype.itemsize
+    for entry in cache.get("period", {}).values():
+        for key in _KV_KEYS:
+            if key in entry:
+                total += entry[key].size * entry[key].dtype.itemsize
+    return total
+
+
+def run_paged_vs_dense(cfg, target, mc, m, rng, *, slot_counts=(1, 4, 16),
+                       decode_steps=8, block_size=8):
+    """The paged refactor's headline: N slots seated on *one* compressed
+    task.  Dense copies the m-token prefix into every slot's cache stripe
+    (prefix memory O(slots)); paged stores it once in shared ref-counted
+    blocks (O(tasks)) — the table reports prefix KV bytes, total KV bytes
+    per slot, and the batched decode-step latency at each pool size."""
+    src = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, C.SOURCE_LEN)),
+                      jnp.int32)
+    kv = materialize_prefix(target, cfg, memcom.compress(mc, cfg, src)[0])
+    prompt = rng.integers(4, cfg.vocab_size, 4).astype(np.int32)
+    max_len = m + 24
+
+    rows, out = [], {"block_size": block_size, "m": m,
+                     "slot_counts": list(slot_counts), "dense": [], "paged": []}
+    for slots in slot_counts:
+        for layout in ("dense", "paged"):
+            eng = ServingEngine(cfg, target, slots=slots, max_len=max_len,
+                                kv_layout=layout,
+                                **({"block_size": block_size}
+                                   if layout == "paged" else {}))
+            eng.add_prefix("task", kv)
+            for s in range(slots):
+                eng.seat_prefix(s, "task")
+                eng._prefill_slot(s, prompt)
+            # drive the decode step exactly as serve() does: lengths
+            # advance each step and (paged) the active slots' tables grow
+            # before the write position crosses into a new block
+            lengths = eng.base + len(prompt)  # np, mutated in place
+            active = range(slots)
+            step = eng._decode_greedy
+
+            def one_step(cache, ids):
+                if layout == "paged":
+                    eng._ensure_decode_blocks(active, lengths)
+                    args = (jnp.asarray(eng.tables),)
+                else:
+                    args = ()
+                ids, cache = step(eng.params, cache, ids,
+                                  jnp.asarray(lengths, jnp.int32), *args)
+                lengths[:] += 1
+                return cache, ids
+
+            tok = jnp.ones((slots, 1), jnp.int32)
+            cache, ids = one_step(eng.cache, tok)  # compile, untimed
+            jax.block_until_ready(ids)
+            t0 = time.perf_counter()
+            for _ in range(decode_steps):
+                cache, ids = one_step(cache, ids[:, None])
+            jax.block_until_ready(ids)
+            ms_step = (time.perf_counter() - t0) / decode_steps * 1e3
+
+            kv_total = _kv_leaf_bytes(eng.cache)
+            if layout == "paged":
+                # shared physical copy: the store's resident blocks
+                block_bytes = kv_total // eng.alloc.num_blocks
+                prefix_bytes = len(eng.store.blocks("task")) * block_bytes
+                used_bytes = eng.alloc.used_count * block_bytes
+            else:
+                # one stripe per slot: every slot carries its own copy
+                prefix_bytes = kv_total // max_len * m
+                used_bytes = kv_total
+            rows.append((layout, slots, f"{prefix_bytes/1e3:.1f}",
+                         f"{used_bytes/1e3/slots:.1f}", f"{ms_step:.2f}"))
+            out[layout].append({
+                "slots": slots, "prefix_kv_bytes": int(prefix_bytes),
+                "kv_bytes_per_slot": used_bytes / slots,
+                "ms_per_decode_step": ms_step})
+
+    print(C.fmt_table(rows, ("layout", "slots", "prefix KV (KB, all slots)",
+                             "KV/slot (KB)", "ms/step (CPU)")) + "\n")
+    d1, d16 = out["dense"][0], out["dense"][-1]
+    p1, p16 = out["paged"][0], out["paged"][-1]
+    print(f"prefix KV growth 1 -> {slot_counts[-1]} slots: "
+          f"dense {d16['prefix_kv_bytes']/d1['prefix_kv_bytes']:.1f}x, "
+          f"paged {p16['prefix_kv_bytes']/p1['prefix_kv_bytes']:.2f}x "
+          "(shared blocks)\n")
+    return out
 
 
 if __name__ == "__main__":

@@ -246,6 +246,95 @@ def decode_attention_lengths(
     return jnp.where((l > 0)[..., None], out, 0).reshape(B, Sq, Hq, Dv)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache primitives (vLLM-style block pool + per-slot block tables)
+# ---------------------------------------------------------------------------
+
+
+def paged_scatter(pool, new, block_tables, starts):
+    """Write ``new[b, s]`` into the block pool at logical cache position
+    ``starts[b] + s`` of slot ``b``.
+
+    ``pool`` is ``(num_blocks, block_size, ...)``; ``new`` is ``(B, S, ...)``
+    with matching trailing dims; ``block_tables`` ``(B, num_table_cols)``
+    int32 maps each slot's logical block ``j`` to a physical pool block;
+    ``starts`` ``(B,)`` int32.  Positions are translated token-wise
+    (``block = table[b, pos // bs]``, ``offset = pos % bs``) so a write may
+    straddle physical blocks that are not adjacent in the pool.
+    """
+    bs = pool.shape[1]
+    B, S = new.shape[:2]
+    pos = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B,S)
+    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)  # (B,S)
+    return pool.at[blk, pos % bs].set(new.astype(pool.dtype))
+
+
+def paged_gather(pool, block_tables):
+    """Materialize each slot's logical cache view from the pool:
+    ``(num_blocks, bs, ...) x (B, nb) -> (B, nb*bs, ...)``."""
+    B, nb = block_tables.shape
+    view = pool[block_tables]  # (B, nb, bs, ...)
+    return view.reshape(B, nb * pool.shape[1], *pool.shape[2:])
+
+
+def paged_decode_attention_lengths(
+    q, k_pool, v_pool, *, block_tables, lengths, softcap=0.0, scale=None,
+):
+    """Streaming paged decode attention: walk each slot's block table.
+
+    Same contract as :func:`decode_attention_lengths` except K/V live in a
+    shared ``(num_blocks, block_size, Hkv, D)`` pool and slot ``b``'s cache
+    positions ``[j*bs, (j+1)*bs)`` resolve to pool block
+    ``block_tables[b, j]``.  One gather of ``(B, bs, ...)`` per table column
+    — never the materialized ``(B, nb*bs, ...)`` view — and columns at or
+    beyond ``max(lengths)`` are skipped at runtime via ``lax.cond``.
+    """
+    B, Sq, Hq, Dk = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    Dv = v_pool.shape[-1]
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    if scale is None:
+        scale = Dk**-0.5
+
+    qh = _gqa_fold(q, Hkv)
+    q_pos = lengths[:, None] - Sq + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    live_end = jnp.max(lengths)
+
+    def attend(carry, j):
+        acc, m, l = carry
+        blk = jax.lax.dynamic_slice_in_dim(block_tables, j, 1, axis=1)[:, 0]
+        kc = k_pool[blk]  # (B, bs, Hkv, Dk)
+        vc = v_pool[blk]
+        pos = j * bs + jnp.arange(bs, dtype=jnp.int32)
+        logits = jnp.einsum("bqhgd,bchd->bqhgc", qh, kc.astype(qh.dtype))
+        logits = logits.astype(jnp.float32) * scale
+        logits = _apply_softcap(logits, softcap)
+        valid = pos[None, None, :] <= q_pos[:, :, None]
+        logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgc,bchd->bqhgd", p.astype(vc.dtype), vc)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return acc, m_new, l
+
+    def body(carry, j):
+        carry = jax.lax.cond(j * bs < live_end, attend,
+                             lambda carry, _j: carry, carry, j)
+        return carry, None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), jnp.arange(nb, dtype=jnp.int32))
+    out = (acc / jnp.maximum(l, 1e-37)[..., None]).astype(q.dtype)
+    return jnp.where((l > 0)[..., None], out, 0).reshape(B, Sq, Hq, Dv)
+
+
 def combine_attention_partials(parts):
     """Exact combination of attention computed over disjoint KV sets.
 

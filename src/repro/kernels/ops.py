@@ -142,6 +142,50 @@ def decode_attention(q, k, v, *, lengths, softcap=0.0, scale=None,
         kv_chunk=kv_chunk)
 
 
+def paged_decode_attention(q, k_pool, v_pool, *, block_tables, lengths,
+                           softcap=0.0, scale=None, impl="auto"):
+    """Per-slot decode attention over a paged (block-pool) KV cache.
+
+    ``q`` (B, S, Hq, D) holds each slot's last S tokens; ``k_pool`` /
+    ``v_pool`` (num_blocks, block_size, Hkv, D) are the shared physical
+    pools; ``block_tables`` (B, nb) int32 maps slot ``b``'s logical block
+    ``j`` to a pool block; ``lengths`` (B,) is each slot's total valid
+    length *including* the S new tokens.  Slot ``b`` attends causally
+    within logical positions ``[0, lengths[b])`` — identical semantics to
+    :func:`decode_attention` on the materialized view, but prefix blocks
+    shared between slots are stored (and streamed) once.
+
+    The jnp path gathers one ``(B, block_size, ...)`` chunk per table
+    column and skips columns past ``max(lengths)``; the pallas path walks
+    the tables with scalar-prefetched indices (one grid program per slot
+    reusing the flash-decode inner loop); the dense path materializes each
+    slot's view and defers to :func:`decode_attention`'s oracle.
+    """
+    B, S = q.shape[:2]
+    bs = k_pool.shape[1]
+    L = block_tables.shape[1] * bs
+    small = S * L <= 256 * 256
+    impl = _resolve(impl, small)
+    if impl == "dense":
+        k = jnp_impl.paged_gather(k_pool, block_tables).astype(q.dtype)
+        v = jnp_impl.paged_gather(v_pool, block_tables).astype(q.dtype)
+        slot = jnp.arange(L, dtype=jnp.int32)
+        kv_pos = jnp.broadcast_to(slot[None, :], (B, L))
+        q_pos = lengths[:, None] - S + jnp.arange(S, dtype=jnp.int32)[None, :]
+        return ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                 causal=True, softcap=softcap, scale=scale)
+    if impl == "pallas":
+        from repro.kernels import paged_attention  # lazy: TPU-targeted
+
+        return paged_attention.paged_flash_decode(
+            q, k_pool, v_pool, block_tables=block_tables, lengths=lengths,
+            softcap=softcap, scale=scale,
+            interpret=jax.default_backend() != "tpu")
+    return jnp_impl.paged_decode_attention_lengths(
+        q, k_pool, v_pool, block_tables=block_tables, lengths=lengths,
+        softcap=softcap, scale=scale)
+
+
 def attention_with_prefix(q, k_self, v_self, k_pre, v_pre, *, pre_pos=None,
                           offset=None, softcap=0.0, scale=None, impl="auto"):
     """Causal self-attention plus a fully-visible KV prefix (MemCom memory).
@@ -232,3 +276,8 @@ def ssd(x, dt, A, Bm, Cm, *, init_state=None, chunk=256, impl="auto"):
 
 
 ssd_decode_step = jnp_impl.ssd_decode_step
+
+# paged-cache primitives (pure jnp, re-exported so model code depends on
+# ops alone and the pallas kernel module stays a lazy import)
+paged_scatter = jnp_impl.paged_scatter
+paged_gather = jnp_impl.paged_gather

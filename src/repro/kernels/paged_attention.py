@@ -1,0 +1,174 @@
+"""Paged decode-attention Pallas TPU kernel (block-pool KV cache).
+
+Serving counterpart of :mod:`repro.kernels.flash_attention`: K/V live in a
+single ``(num_blocks, block_size, Hkv, D)`` pool per layer and each batch
+slot owns a *block table* — a row of physical block ids — instead of a
+contiguous cache stripe.  N slots seated on the same compressed ICL task
+point at the same prefix blocks, so the pool holds each distinct task's
+memory once (O(tasks), not O(slots)).
+
+TPU mapping
+-----------
+Grid ``(B, Hq, nb)`` — one program per (slot, head) *walking that slot's
+block table*; the block axis is innermost and ``ARBITRARY`` (sequential)
+so the online-softmax state lives in VMEM scratch across the walk, exactly
+the flash-decode inner loop.
+
+The physical block to stream is data-dependent (``table[b, j]``), which a
+plain ``BlockSpec`` index map cannot express — block tables and per-slot
+lengths ride in as **scalar-prefetch** operands
+(``pltpu.PrefetchScalarGridSpec``), available to the index maps before the
+kernel body runs, so the pipeline DMAs pool block ``table[b, j]`` while
+program ``j-1`` computes:
+
+* q        (1, Sp, 1, D)   — the slot's last S query rows (padded to 8).
+* k/v pool (1, bs, 1, D)   — block ``table[b*nb + j]``, KV head ``h // G``
+  (GQA fold as in flash_attention).
+* tables   (B*nb,) int32 SMEM — flattened so the index map stays 1-D.
+* lengths  (B,)    int32 SMEM — drives masking *and* the per-slot early
+  skip: a block whose start position is at or past ``lengths[b]`` is
+  skipped via ``pl.when`` (idle slots cost ~nothing; young slots pay only
+  for blocks they filled).
+
+Unused table entries must still hold a *valid* pool index (the engine
+keeps them at 0, a reserved scratch block) — they are never read into the
+softmax because the length mask precedes them, but the DMA engine does
+fetch whatever the index map names.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    tbl_ref, len_ref,  # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref,  # inputs
+    o_ref,  # output
+    acc, m_scr, l_scr,  # scratch
+    *, scale: float, softcap: float, block_size: int, s_valid: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    length = len_ref[b]
+    start = j * block_size
+
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0, :, 0, :]  # (Sp, D)
+        k = k_ref[0, :, 0, :]  # (bs, D)
+        v = v_ref[0, :, 0, :]  # (bs, D)
+        logits = jax.lax.dot_general(
+            q, k.astype(q.dtype), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        Sp = q.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (Sp, block_size), 0)
+        pos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (Sp, block_size), 1)
+        # query row r sits at cache position length - s_valid + r; padded
+        # rows (r >= s_valid) are masked out entirely
+        q_pos = length - s_valid + row
+        valid = (row < s_valid) & (pos <= q_pos)
+        logits = jnp.where(valid, logits, NEG_INF)
+
+        m_prev = m_scr[...]  # (Sp, 1)
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(valid, p, 0.0)  # exp(NEG_INF - NEG_INF) = 1 guard
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc[...] = acc[...] * corr + pv
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        l = l_scr[...]
+        out = acc[...] / jnp.maximum(l, 1e-37)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "scale", "interpret"),
+)
+def paged_flash_decode(
+    q, k_pool, v_pool, *, block_tables, lengths, softcap=0.0, scale=None,
+    interpret=False,
+):
+    """(B,S,Hq,D) x pool (N,bs,Hkv,D) x tables (B,nb) -> (B,S,Hq,Dv).
+
+    Slot ``b`` attends causally within its logical cache positions
+    ``[0, lengths[b])``; logical block ``j`` resolves to pool block
+    ``block_tables[b, j]``.
+    """
+    B, S, Hq, D = q.shape
+    _, bs, Hkv, Dv = v_pool.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    if scale is None:
+        scale = D**-0.5
+
+    # pad query rows to the 8-sublane floor; padded rows are masked via
+    # the in-kernel row < s_valid test and sliced off below
+    Sp = max(S, 8)
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    tables_flat = block_tables.astype(jnp.int32).reshape(-1)  # (B*nb,)
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, softcap=softcap, block_size=bs,
+        s_valid=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, Sp, 1, D), lambda b, h, j, tbl, lens: (b, 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b * nb + j], 0, h // G, 0)),
+            pl.BlockSpec((1, bs, 1, Dv),
+                         lambda b, h, j, tbl, lens: (tbl[b * nb + j], 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, Sp, 1, Dv), lambda b, h, j, tbl, lens: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sp, Dv), jnp.float32),
+            pltpu.VMEM((Sp, 1), jnp.float32),
+            pltpu.VMEM((Sp, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Hq, Dv), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(tables_flat, lengths, q, k_pool, v_pool)
+    return out[:, :S]

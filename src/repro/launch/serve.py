@@ -15,6 +15,13 @@ Stages:
      generate/classify traffic — more requests than slots is fine,
      finished slots refill mid-decode.
 
+``--kv-layout paged`` swaps the per-slot dense cache for the block-pool
+paged cache: every slot seated on the same task points its block table
+at one shared physical copy of the compressed prefix (copy-on-write on
+the partial tail block), so prefix memory is O(tasks) instead of
+O(slots).  ``--block-size``/``--num-blocks`` size the pool; admission is
+gated on free blocks.  See docs/ARCHITECTURE.md.
+
 On a fleet the same entry point runs with the production mesh and
 sharded weights (launch/steps.py `compress` + `decode` objectives are
 the dry-run-proven lowerings of stages 1 and 2).
@@ -50,10 +57,21 @@ def main():
     ap.add_argument("--context-tokens", type=int, default=96)
     ap.add_argument("--classify", action="store_true",
                     help="serve ICL label queries instead of generation")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"), default="dense",
+                    help="dense: per-slot cache stripes; paged: block-pool "
+                         "cache where slots seated on the same compressed "
+                         "task share its prefix blocks (copy-on-write)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="tokens per physical KV block (paged layout only)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical blocks in the paged pool (default: "
+                         "slots+4 worst-case windows)")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args()
     if args.tasks < 1 or args.slots < 1 or args.requests < 1:
         ap.error("--tasks, --slots and --requests must all be >= 1")
+    if args.block_size < 1:
+        ap.error("--block-size must be >= 1")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -69,8 +87,13 @@ def main():
     compressor = memcom.init_memcom(cfg, target, 1)
 
     rng = np.random.default_rng(0)
+    paged_kw = {}
+    if args.kv_layout == "paged":
+        paged_kw = dict(block_size=args.block_size,
+                        num_blocks=args.num_blocks)
     engine = ServingEngine(cfg, target, slots=args.slots,
-                           max_len=m + 24 + args.max_new + 16)
+                           max_len=m + 24 + args.max_new + 16,
+                           kv_layout=args.kv_layout, **paged_kw)
 
     tasks, payload = [], 0
     t0 = time.perf_counter()
@@ -90,7 +113,15 @@ def main():
           f"payload {payload/1e3:.1f} KB total")
     metrics = {"arch": cfg.name, "m": m, "tasks": args.tasks,
                "slots": args.slots, "context_tokens": args.context_tokens,
-               "compress_s": t_compress, "payload_bytes": payload}
+               "compress_s": t_compress, "payload_bytes": payload,
+               "kv_layout": args.kv_layout}
+    if args.kv_layout == "paged":
+        print(f"[edge] paged pool: {engine.alloc.num_blocks} blocks x "
+              f"{engine.block_size} tokens, "
+              f"{engine.alloc.used_count} resident after task registration")
+        metrics.update(block_size=engine.block_size,
+                       num_blocks=engine.alloc.num_blocks,
+                       blocks_resident=engine.alloc.used_count)
 
     if args.classify:
         hits = 0

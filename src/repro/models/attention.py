@@ -99,9 +99,17 @@ def apply_attention(
     cache_index=None,
     kv_source=None,
     decode: bool = False,
+    block_tables=None,
     impl: str = "auto",
 ):
-    """Returns (out (B,S,D), new_cache_or_None)."""
+    """Returns (out (B,S,D), new_cache_or_None).
+
+    With ``block_tables`` (B, nb) the cache entries are *paged*: ``k``/``v``
+    are shared ``(num_blocks, block_size, Hkv, hd)`` pools and slot ``b``'s
+    cache position ``p`` lives at ``(block_tables[b, p // bs], p % bs)``.
+    Decode requires the per-slot length vector; prefill continues behind
+    the seated blocks (static ``cache_index`` base, as in the dense path).
+    """
     B, S, _ = x.shape
     softcap = cfg.attn_logit_softcap
     scale = cfg.hd**-0.5
@@ -132,6 +140,20 @@ def apply_attention(
     if decode:
         assert cache is not None and cache_index is not None
         k_new, v_new = project_kv(p, cfg, x, positions)
+        if block_tables is not None:
+            # paged: scatter the new tokens into each slot's tail block,
+            # then walk the block tables (shared prefix blocks are read by
+            # every slot seated on the task but stored once)
+            assert jnp.ndim(cache_index) == 1, "paged decode needs (slots,) lengths"
+            k_pool = ops.paged_scatter(cache["k"], k_new, block_tables,
+                                       cache_index)
+            v_pool = ops.paged_scatter(cache["v"], v_new, block_tables,
+                                       cache_index)
+            out = ops.paged_decode_attention(
+                q, k_pool, v_pool, block_tables=block_tables,
+                lengths=cache_index + S, softcap=softcap, scale=scale,
+                impl=impl)
+            return out.reshape(B, S, -1) @ p["wo"], {"k": k_pool, "v": v_pool}
         if jnp.ndim(cache_index) == 1:
             # per-slot lengths (continuous batching): each slot writes at its
             # own offset and is masked to its own seated region only
@@ -173,8 +195,19 @@ def apply_attention(
         # prefill continuation: slots [0, cache_index) are already seated
         # (compressed memory or an earlier prefill segment) — attend to
         # them as a fully-visible prefix.  Static start only.
-        prefix = {"k": cache["k"][:, :cache_index].astype(x.dtype),
-                  "v": cache["v"][:, :cache_index].astype(x.dtype)}
+        if block_tables is not None:
+            bs = cache["k"].shape[1]
+            nbt = -(-cache_index // bs)  # ceil: blocks covering the base
+            blk = block_tables[:, :nbt]
+            prefix = {
+                "k": ops.paged_gather(cache["k"], blk)[:, :cache_index]
+                .astype(x.dtype),
+                "v": ops.paged_gather(cache["v"], blk)[:, :cache_index]
+                .astype(x.dtype),
+            }
+        else:
+            prefix = {"k": cache["k"][:, :cache_index].astype(x.dtype),
+                      "v": cache["v"][:, :cache_index].astype(x.dtype)}
     if prefix is not None:
         k_pre, v_pre = _prefix_kv(p, cfg, prefix)
         m = k_pre.shape[1]
@@ -188,12 +221,19 @@ def apply_attention(
     new_cache = None
     if cache is not None:  # prefill writes the cache
         start = cache_index if cache_index is not None else 0
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), start, axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), start, axis=1),
-        }
+        if block_tables is not None:
+            starts = jnp.full((B,), start, jnp.int32)
+            new_cache = {
+                "k": ops.paged_scatter(cache["k"], k, block_tables, starts),
+                "v": ops.paged_scatter(cache["v"], v, block_tables, starts),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), start, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), start, axis=1),
+            }
     return out.reshape(B, S, -1) @ p["wo"], new_cache
 
 
@@ -202,6 +242,15 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     return {
         "k": jnp.zeros((batch, max_len, nkv, hd), dtype),
         "v": jnp.zeros((batch, max_len, nkv, hd), dtype),
+    }
+
+
+def init_paged_attn_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                          dtype) -> dict:
+    nkv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((num_blocks, block_size, nkv, hd), dtype),
+        "v": jnp.zeros((num_blocks, block_size, nkv, hd), dtype),
     }
 
 

@@ -17,10 +17,11 @@ from repro.models.attention import (
     init_attention,
     init_attn_cache,
     init_cross_cache,
+    init_paged_attn_cache,
 )
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
 from repro.models.mamba2 import apply_mamba, init_mamba, init_mamba_cache
-from repro.models.mla import apply_mla, init_mla, init_mla_cache
+from repro.models.mla import apply_mla, init_mla, init_mla_cache, init_paged_mla_cache
 from repro.models.moe import apply_moe, init_moe
 from repro.models.param import ParamBuilder
 from repro.models.xattn import apply_memcom_xattn
@@ -59,11 +60,17 @@ def apply_block(
     cache: Optional[dict] = None,
     cache_index=None,
     decode: bool = False,
+    block_tables=None,
     encoder_out=None,
     memcom: Optional[dict] = None,
     impl: str = "auto",
 ):
-    """Returns (h, new_cache_or_None, aux{moe_loss, omega})."""
+    """Returns (h, new_cache_or_None, aux{moe_loss, omega}).
+
+    ``block_tables`` routes the attention/MLA cache entries through the
+    paged block-pool layout; recurrent (conv/ssm) and cross-attention
+    entries stay per-slot dense either way.
+    """
     aux = {"moe_loss": jnp.float32(0.0), "omega": None}
     new_cache = {} if cache is not None else None
 
@@ -76,7 +83,7 @@ def apply_block(
         o, c = apply_attention(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, impl=impl)
+            decode=decode, block_tables=block_tables, impl=impl)
         if c is not None:
             new_cache.update(c)
     elif desc.mixer == "mla":
@@ -86,7 +93,7 @@ def apply_block(
         o, c = apply_mla(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, impl=impl)
+            decode=decode, block_tables=block_tables, impl=impl)
         if c is not None:
             new_cache.update(c)
     else:  # mamba
@@ -144,4 +151,22 @@ def init_block_cache(cfg: ModelConfig, desc: LayerDesc, batch: int,
     if desc.cross_attn:
         assert cfg.encoder is not None
         c.update(init_cross_cache(cfg, batch, cfg.encoder.num_frames, dtype))
+    return c
+
+
+def init_block_paged_cache(cfg: ModelConfig, desc: LayerDesc, num_blocks: int,
+                           block_size: int, slots: int, dtype) -> dict:
+    """Paged layout: attention/MLA KV pooled over ``num_blocks`` physical
+    blocks (shared across slots via block tables); recurrent state and
+    cross-attention KV stay per-slot (they are O(1) resp. fixed-size per
+    slot — paging them buys nothing)."""
+    if desc.mixer == "attn":
+        c = init_paged_attn_cache(cfg, num_blocks, block_size, dtype)
+    elif desc.mixer == "mla":
+        c = init_paged_mla_cache(cfg, num_blocks, block_size, dtype)
+    else:
+        c = init_mamba_cache(cfg, slots, dtype)
+    if desc.cross_attn:
+        assert cfg.encoder is not None
+        c.update(init_cross_cache(cfg, slots, cfg.encoder.num_frames, dtype))
     return c

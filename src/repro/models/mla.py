@@ -82,9 +82,16 @@ def apply_mla(
     cache: Optional[dict] = None,
     cache_index=None,
     decode: bool = False,
+    block_tables=None,
     impl: str = "auto",
 ):
-    """Returns (out, new_cache_or_None).  Cache = {"ckv", "kr"}."""
+    """Returns (out, new_cache_or_None).  Cache = {"ckv", "kr"}.
+
+    With ``block_tables`` the latent cache is paged: ``ckv``/``kr`` are
+    ``(num_blocks, block_size, ...)`` pools indexed per slot through the
+    table — the absorbed-MQA decode walks blocks instead of a contiguous
+    stripe, and prefix blocks shared across slots are stored once.
+    """
     m = cfg.mla
     B, S, _ = x.shape
     nh = cfg.num_heads
@@ -96,7 +103,13 @@ def apply_mla(
         assert cache is not None and cache_index is not None
         ckv_new, kr_new = _latent(p, cfg, x, positions)
         per_slot = jnp.ndim(cache_index) == 1
-        if per_slot:
+        if block_tables is not None:
+            assert per_slot, "paged decode needs (slots,) lengths"
+            ckv_cache = ops.paged_scatter(cache["ckv"], ckv_new, block_tables,
+                                          cache_index)
+            kr_cache = ops.paged_scatter(cache["kr"], kr_new[:, :, 0, :],
+                                         block_tables, cache_index)
+        elif per_slot:
             from repro.models.attention import scatter_rows
 
             ckv_cache = scatter_rows(cache["ckv"], ckv_new, cache_index)
@@ -111,9 +124,18 @@ def apply_mla(
         wuk = wukv[:, :, : m.qk_nope_head_dim]
         q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)
         q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B,S,nh,R+rd)
+        # MQA: 1 shared kv head (dense caches: axis 1 = positions; paged:
+        # the whole pool is concatenated — same O(cache) data movement as
+        # dense; splitting the latent/rope dot inside the kernel would
+        # remove it entirely)
         k_eff = jnp.concatenate([ckv_cache, kr_cache], axis=-1)[:, :, None, :]
-        v_eff = ckv_cache[:, :, None, :]  # MQA: 1 shared kv head
-        if per_slot:
+        v_eff = ckv_cache[:, :, None, :]
+        if block_tables is not None:
+            o_lat = ops.paged_decode_attention(
+                q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
+                block_tables=block_tables, lengths=cache_index + S,
+                scale=scale, impl=impl)
+        elif per_slot:
             o_lat = ops.decode_attention(
                 q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
                 lengths=cache_index + S, scale=scale, impl=impl)
@@ -133,8 +155,17 @@ def apply_mla(
     if (prefix is None and cache is not None
             and isinstance(cache_index, int) and cache_index > 0):
         # prefill continuation over already-seated latent slots
-        prefix = {"ckv": cache["ckv"][:, :cache_index],
-                  "kr": cache["kr"][:, :cache_index]}
+        if block_tables is not None:
+            bs_blk = cache["ckv"].shape[1]
+            nbt = -(-cache_index // bs_blk)
+            blk = block_tables[:, :nbt]
+            prefix = {
+                "ckv": ops.paged_gather(cache["ckv"], blk)[:, :cache_index],
+                "kr": ops.paged_gather(cache["kr"], blk)[:, :cache_index],
+            }
+        else:
+            prefix = {"ckv": cache["ckv"][:, :cache_index],
+                      "kr": cache["kr"][:, :cache_index]}
     ckv, k_rope = _latent(p, cfg, x, positions)
     k_nope, v = _expand_kv(p, cfg, ckv)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
@@ -163,12 +194,21 @@ def apply_mla(
     new_cache = None
     if cache is not None:
         start = cache_index if cache_index is not None else 0
-        new_cache = {
-            "ckv": jax.lax.dynamic_update_slice_in_dim(
-                cache["ckv"], ckv.astype(cache["ckv"].dtype), start, axis=1),
-            "kr": jax.lax.dynamic_update_slice_in_dim(
-                cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), start, axis=1),
-        }
+        if block_tables is not None:
+            starts = jnp.full((B,), start, jnp.int32)
+            new_cache = {
+                "ckv": ops.paged_scatter(cache["ckv"], ckv, block_tables,
+                                         starts),
+                "kr": ops.paged_scatter(cache["kr"], k_rope[:, :, 0, :],
+                                        block_tables, starts),
+            }
+        else:
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), start, axis=1),
+                "kr": jax.lax.dynamic_update_slice_in_dim(
+                    cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype), start, axis=1),
+            }
     return out.reshape(B, S, -1) @ p["wo"], new_cache
 
 
@@ -177,4 +217,13 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
     return {
         "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def init_paged_mla_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                         dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((num_blocks, block_size, m.qk_rope_head_dim), dtype),
     }

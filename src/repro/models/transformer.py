@@ -28,7 +28,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models.blocks import apply_block, init_block, init_block_cache
+from repro.models.blocks import (
+    apply_block,
+    init_block,
+    init_block_cache,
+    init_block_paged_cache,
+)
 from repro.models.layers import (
     apply_mlp,
     apply_norm,
@@ -170,6 +175,8 @@ def forward(
     cache: Optional[dict] = None,  # Layerwise KV/state cache
     cache_index=None,
     decode: bool = False,
+    block_tables=None,  # (B, nb) int32: paged-cache block tables
+
     capture_hiddens: bool = False,
     memcom: Optional[dict] = None,  # {"params": Layerwise, "src": Layerwise}
     encoder_frames=None,
@@ -232,7 +239,8 @@ def forward(
         return apply_block(
             p, cfg, desc, h, positions=positions, mask_offset=mask_offset,
             prefix=lpre, cache=lcache, cache_index=cache_index, decode=decode,
-            encoder_out=encoder_out, memcom=mem, impl=impl)
+            block_tables=block_tables, encoder_out=encoder_out, memcom=mem,
+            impl=impl)
 
     for i, desc in enumerate(cfg.layout.prefix):
         if capture_hiddens:
@@ -322,6 +330,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     if cfg.layout.repeats:
         for j, desc in enumerate(cfg.layout.period):
             one = init_block_cache(cfg, desc, batch, max_len, dtype)
+            period[f"l{j}"] = jax.tree.map(
+                lambda x: jnp.zeros((cfg.layout.repeats,) + x.shape, x.dtype), one)
+    return layerwise(prefix, period)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     slots: int, dtype=None):
+    """Block-pool KV cache: attention/MLA leaves are a single
+    ``(num_blocks, block_size, ...)`` physical pool per layer (period
+    section stacks a pool per repeat on the leading axis, as always),
+    addressed through per-slot block tables; recurrent conv/ssm and
+    cross-attention leaves keep the per-slot ``(slots, ...)`` layout."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    prefix = [
+        init_block_paged_cache(cfg, desc, num_blocks, block_size, slots, dtype)
+        for desc in cfg.layout.prefix
+    ]
+    period = {}
+    if cfg.layout.repeats:
+        for j, desc in enumerate(cfg.layout.period):
+            one = init_block_paged_cache(cfg, desc, num_blocks, block_size,
+                                         slots, dtype)
             period[f"l{j}"] = jax.tree.map(
                 lambda x: jnp.zeros((cfg.layout.repeats,) + x.shape, x.dtype), one)
     return layerwise(prefix, period)

@@ -1,8 +1,35 @@
+"""Serving package: continuous batching over compressed task prefixes.
+
+Two KV layouts share one engine API (``ServingEngine(kv_layout=...)``):
+
+* ``dense`` — per-slot ``(slots, max_len, ...)`` cache stripes;
+* ``paged`` — a shared block pool with per-slot block tables, ref-counted
+  so slots seated on the same compressed task share its prefix blocks
+  (`docs/ARCHITECTURE.md` has the layout).
+
+Everything imported here is CPU-safe: the pallas paged-attention kernel
+is reached only through :func:`repro.kernels.ops.paged_decode_attention`'s
+lazy dispatch (mirroring ``ops._resolve``), so ``from repro.serving
+import *`` never pulls TPU kernel modules onto CPU-only hosts.
+"""
+
+from repro.serving.block_pool import (
+    BlockAllocationError,
+    BlockAllocator,
+    OutOfBlocksError,
+)
 from repro.serving.engine import ServingEngine, materialize_prefix
-from repro.serving.prefix_store import PrefixStore, write_prefix_to_cache
+from repro.serving.prefix_store import (
+    PagedPrefixStore,
+    PrefixSeatedError,
+    PrefixStore,
+    write_prefix_to_cache,
+)
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = [
-    "ServingEngine", "PrefixStore", "Request", "Scheduler",
+    "ServingEngine", "Request", "Scheduler",
+    "PrefixStore", "PagedPrefixStore", "PrefixSeatedError",
+    "BlockAllocator", "BlockAllocationError", "OutOfBlocksError",
     "materialize_prefix", "write_prefix_to_cache",
 ]

@@ -23,7 +23,17 @@ Deployment story (paper §1: cloud compresses offline, edge serves):
    * **per-slot stop** — a slot finishing (its stop token or its budget)
      frees immediately and the scheduler refills it mid-decode.
 
-See docs/ARCHITECTURE.md for the cache layout and scheduling design.
+Two KV layouts (``kv_layout=``):
+
+* ``dense`` — per-slot ``(slots, max_len, …)`` cache stripes; seating
+  copies the prefix into the slot's rows (prefix memory O(slots)).
+* ``paged`` — one ``(num_blocks, block_size, …)`` physical pool per
+  layer plus per-slot block tables; slots seated on the same task share
+  its ref-counted prefix blocks (prefix memory O(tasks)), with
+  copy-on-write only for a partially-filled tail block, private blocks
+  freed on refill, and admission gated on free blocks.
+
+See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 """
 
 from __future__ import annotations
@@ -36,10 +46,18 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import transformer as tfm
+from repro.serving.block_pool import (
+    TRASH_BLOCK,
+    BlockAllocator,
+    OutOfBlocksError,
+)
 from repro.serving.prefix_store import (  # re-exported for compatibility
+    _KV_KEYS,
+    PagedPrefixStore,
     PrefixStore,
     _map_rowwise,
     clear_slot_state,
+    copy_paged_block,
     materialize_prefix,
     seat_prefix_row,
     write_prefix_to_cache,
@@ -47,8 +65,8 @@ from repro.serving.prefix_store import (  # re-exported for compatibility
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = [
-    "ServingEngine", "PrefixStore", "Request", "Scheduler",
-    "materialize_prefix", "write_prefix_to_cache",
+    "ServingEngine", "PrefixStore", "PagedPrefixStore", "Request",
+    "Scheduler", "materialize_prefix", "write_prefix_to_cache",
 ]
 
 
@@ -68,6 +86,29 @@ def _merge_slot(cache, row, slot):
     return _map_rowwise(cache, row, f)
 
 
+def _slice_slot_paged(cache, slot):
+    """Paged prefill view: per-slot leaves (conv/ssm/cross) sliced to a
+    size-1 batch; pooled KV leaves pass through whole — the pool is global
+    and the block-table row scopes the write to this slot's blocks."""
+    def f(c, _p, axis):
+        return {k: x if k in _KV_KEYS
+                else jax.lax.dynamic_slice_in_dim(x, slot, 1, axis)
+                for k, x in c.items()}
+    return _map_rowwise(cache, None, f)
+
+
+def _merge_slot_paged(cache, new, slot):
+    """Merge a paged batch-1 prefill result back: pooled leaves are taken
+    wholesale (the scatter already landed in the right blocks), per-slot
+    leaves land back in their slot row."""
+    def f(c, p, axis):
+        return {k: p[k] if k in _KV_KEYS
+                else jax.lax.dynamic_update_slice_in_dim(
+                    c[k], p[k].astype(c[k].dtype), slot, axis)
+                for k in c}
+    return _map_rowwise(cache, new, f)
+
+
 def _bucket(n: int, cap: int) -> int:
     """Static prefill widths: next power of two (min 8), clamped to the
     slot's remaining cache space.  A handful of buckets ⇒ a handful of
@@ -78,14 +119,19 @@ def _bucket(n: int, cap: int) -> int:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, target_params, *, slots: int,
                  max_len: int, impl: str = "auto",
-                 prefix_store: Optional[PrefixStore] = None):
+                 prefix_store: Optional[PrefixStore] = None,
+                 kv_layout: str = "dense", block_size: int = 8,
+                 num_blocks: Optional[int] = None,
+                 prefix_capacity: Optional[int] = None):
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be dense or paged, got "
+                             f"{kv_layout!r}")
         self.cfg = cfg
         self.params = target_params
         self.slots = slots
         self.max_len = max_len
         self.impl = impl
-        self.cache = tfm.init_cache(cfg, slots, max_len)
-        self.store = prefix_store if prefix_store is not None else PrefixStore(cfg)
+        self.kv_layout = kv_layout
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
         self._seated: List[Optional[str]] = [None] * slots  # named prefix
@@ -96,6 +142,34 @@ class ServingEngine:
         self._recurrent = any(d.mixer == "mamba" for d in descs)
         self._pad_prefill = not self._recurrent
 
+        if kv_layout == "paged":
+            if prefix_store is not None:
+                raise ValueError(
+                    "paged engines own their PagedPrefixStore (its blocks "
+                    "live in the engine's pool); pass prefix_capacity instead")
+            table_width = -(-max_len // block_size)
+            if num_blocks is None:
+                # every slot's worst case, headroom for 4 resident task
+                # prefixes, plus the reserved trash block
+                num_blocks = 1 + (slots + 4) * table_width
+            self.block_size = block_size
+            self.alloc = BlockAllocator(num_blocks, block_size)
+            self.cache = tfm.init_paged_cache(cfg, num_blocks, block_size,
+                                              slots)
+            self.tables = np.full((slots, table_width), TRASH_BLOCK, np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(slots)]
+            # blocks promised to admitted-but-unfinished requests: decode
+            # allocations draw them down; _can_admit nets them off the
+            # free count so concurrent slots can't race the pool empty
+            self._reserved = np.zeros((slots,), np.int64)
+            self._reserved_pending = 0  # admitted, not yet prefilled
+            self.store = PagedPrefixStore(cfg, self.alloc,
+                                          capacity=prefix_capacity)
+        else:
+            self.cache = tfm.init_cache(cfg, slots, max_len)
+            self.store = (prefix_store if prefix_store is not None
+                          else PrefixStore(cfg))
+
         def prefill_fn(params, cache, tokens, slot, base):
             row = _slice_slot(cache, slot)
             logits, aux = tfm.forward(
@@ -103,36 +177,88 @@ class ServingEngine:
                 mask_offset=base, impl=impl)
             return logits[0], _merge_slot(cache, aux["cache"], slot)
 
+        def paged_prefill_fn(params, cache, tokens, slot, table_row, base):
+            row = _slice_slot_paged(cache, slot)
+            logits, aux = tfm.forward(
+                params, cfg, tokens=tokens, cache=row, cache_index=base,
+                mask_offset=base, block_tables=table_row[None, :], impl=impl)
+            return logits[0], _merge_slot_paged(cache, aux["cache"], slot)
+
         def decode_fn(params, cache, tok, lengths):
             logits, aux = tfm.forward(
                 params, cfg, tokens=tok, cache=cache, cache_index=lengths,
                 decode=True, impl=impl)
             return logits[:, -1], aux["cache"]
 
-        def decode_greedy_fn(params, cache, tok, lengths):
-            logits, new_cache = decode_fn(params, cache, tok, lengths)
-            # argmax on device: ship (slots,) token ids, not (slots, vocab)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+        def paged_decode_fn(params, cache, tok, lengths, tables):
+            logits, aux = tfm.forward(
+                params, cfg, tokens=tok, cache=cache, cache_index=lengths,
+                decode=True, block_tables=tables, impl=impl)
+            return logits[:, -1], aux["cache"]
+
+        def greedy(step):
+            def fn(params, cache, tok, lengths, *rest):
+                logits, new_cache = step(params, cache, tok, lengths, *rest)
+                # argmax on device: ship (slots,) ids, not (slots, vocab)
+                return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+            return fn
 
         # base is static: prefill-continuation slices the seated cache
         # region with a python int (one trace per (bucket, base) pair);
-        # slot and lengths are traced, so admission/refill never recompiles
-        self._prefill = jax.jit(prefill_fn, static_argnums=(4,))
-        self._decode = jax.jit(decode_fn)
-        self._decode_greedy = jax.jit(decode_greedy_fn)
+        # slot, lengths and block tables are traced, so admission/refill
+        # (and block re-mapping) never recompile
+        if kv_layout == "paged":
+            self._prefill = jax.jit(paged_prefill_fn, static_argnums=(5,))
+            self._decode = jax.jit(paged_decode_fn)
+            self._decode_greedy = jax.jit(greedy(paged_decode_fn))
+        else:
+            self._prefill = jax.jit(prefill_fn, static_argnums=(4,))
+            self._decode = jax.jit(decode_fn)
+            self._decode_greedy = jax.jit(greedy(decode_fn))
 
     # ------------------------------------------------------------------
     # Prefix seating
     # ------------------------------------------------------------------
 
     def add_prefix(self, name: str, materialized, batch_index: int = 0) -> str:
-        """Register a materialized compressed prefix under ``name``."""
+        """Register a materialized compressed prefix under ``name``.  In
+        the paged layout this scatters the prefix into pool blocks once —
+        every slot later seated on it shares that single physical copy."""
+        if self.kv_layout == "paged":
+            self.cache = self.store.put(name, materialized, self.cache,
+                                        batch_index)
+            return name
         return self.store.put(name, materialized, batch_index)
+
+    # ---- paged block bookkeeping ----
+
+    def _release_slot_blocks(self, slot: int) -> None:
+        """Drop this slot's references: private blocks return to the free
+        pool; shared prefix blocks persist (the PrefixStore holds a ref)."""
+        for b in self._slot_blocks[slot]:
+            self.alloc.decref(b)
+        self._slot_blocks[slot] = []
+        self.tables[slot, :] = TRASH_BLOCK
+
+    def _seat_blocks(self, slot: int, name: str) -> None:
+        """Point one slot's block table at a resident prefix's blocks."""
+        self._release_slot_blocks(slot)
+        blocks = self.store.blocks(name)
+        for b in blocks:
+            self.alloc.incref(b)
+        self._slot_blocks[slot] = blocks
+        self.tables[slot, :len(blocks)] = blocks
 
     def seat_prefix(self, slot: int, name: str) -> None:
         """Install task ``name``'s compressed memory into one slot."""
         self.cache = clear_slot_state(self.cache, slot)
-        self.cache = seat_prefix_row(self.cache, self.store.get(name), slot)
+        if self.kv_layout == "paged":
+            self._seat_blocks(slot, name)
+            state = self.store.state_row(name)
+            if state is not None:  # recurrent handoff stays per-slot
+                self.cache = seat_prefix_row(self.cache, state, slot)
+        else:
+            self.cache = seat_prefix_row(self.cache, self.store.get(name), slot)
         self.base[slot] = self.store.base_len(name)
         self._seated[slot] = name
         self._dirty[slot] = False
@@ -141,14 +267,23 @@ class ServingEngine:
         """Compat: install an offline-compressed context batch-wide (row b
         of the materialized prefix seats slot b).  Rows are also kept in the
         PrefixStore so dirtied slots can be re-seated on later serves."""
-        self.cache = write_prefix_to_cache(self.cfg, self.cache,
-                                           prefix_materialized)
         assert self.cfg.memcom is not None
         self.base_len = self.cfg.memcom.num_memory_tokens
-        self.base[:] = self.base_len
-        for b in range(self.slots):
-            self.store.put(self._COMPAT + str(b), prefix_materialized,
-                           batch_index=b)
+        if self.kv_layout == "paged":
+            for b in range(self.slots):
+                name = self._COMPAT + str(b)
+                # unseat first so a re-put never trips the eviction guard
+                self._release_slot_blocks(b)
+                self.cache = self.store.put(name, prefix_materialized,
+                                            self.cache, batch_index=b)
+                self.seat_prefix(b, name)
+        else:
+            self.cache = write_prefix_to_cache(self.cfg, self.cache,
+                                               prefix_materialized)
+            self.base[:] = self.base_len
+            for b in range(self.slots):
+                self.store.put(self._COMPAT + str(b), prefix_materialized,
+                               batch_index=b)
         self._seated = [None] * self.slots
         self._dirty[:] = False
 
@@ -167,6 +302,8 @@ class ServingEngine:
             self._seated[slot] = None  # engine-wide context, not request-named
         else:
             self.cache = clear_slot_state(self.cache, slot)
+            if self.kv_layout == "paged":
+                self._release_slot_blocks(slot)
             self.base[slot] = 0
             self._seated[slot] = None
             self._dirty[slot] = False
@@ -216,13 +353,34 @@ class ServingEngine:
         results: Dict[int, np.ndarray] = {}
         pending = np.zeros((self.slots,), np.int32)  # next token per slot
         lengths = self.base.copy()  # per-slot valid cache length
+        paged = self.kv_layout == "paged"
+        can_seat = self._can_admit if paged else None
 
         def _finish(slot):
             req, toks = sched.finish(slot)
+            if paged:
+                self._reserved[slot] = 0  # unused decode headroom returns
             results[req.uid] = toks
 
         while sched.has_work():
-            for slot, req in sched.admit():
+            admitted = sched.admit(can_seat)
+            if paged and not admitted and not sched.active_slots() \
+                    and sched.pending:
+                # nothing running and the head request doesn't pass the
+                # free-block gate: reclaim every free slot's private
+                # blocks, then retry once — fail fast instead of spinning
+                for slot in sched.free_slots():
+                    self._release_slot_blocks(slot)
+                    self.base[slot] = 0
+                    self._seated[slot] = None
+                admitted = sched.admit(can_seat)
+                if not admitted:
+                    raise OutOfBlocksError(
+                        f"paged KV pool ({self.alloc.num_blocks} blocks of "
+                        f"{self.block_size}) cannot hold the next request "
+                        "even with every free slot reclaimed — grow "
+                        "num_blocks or evict resident prefixes")
+            for slot, req in admitted:
                 if req.prefix is not None:
                     # skip the re-seat when the slot provably still holds
                     # this prefix (KV region [0, m) is never overwritten;
@@ -231,6 +389,21 @@ class ServingEngine:
                         self.seat_prefix(slot, req.prefix)
                 else:
                     self._reset_slot(slot)
+                if paged:
+                    # the gate's pending reservation becomes this slot's:
+                    # prefill allocates its share now, the rest stays
+                    # reserved for the decode steps to draw down
+                    self._reserved_pending -= self._blocks_needed(
+                        req, self._req_base(req))  # what the gate added
+                    base = int(self.base[slot])
+                    need = self._blocks_needed(req, base)
+                    n = len(req.tokens)
+                    width = (_bucket(n, self.max_len - base)
+                             if self._pad_prefill else n)
+                    covered = (self.alloc.blocks_for(base + width)
+                               - self.alloc.blocks_for(base)
+                               + (1 if base % self.block_size else 0))
+                    self._reserved[slot] = max(0, need - covered)
                 row_logits = self._prefill_slot(slot, req.tokens)
                 lengths[slot] = self.base[slot] + len(req.tokens)
                 tok = self._sample_row(row_logits, req.temperature, rng)
@@ -242,9 +415,16 @@ class ServingEngine:
                 continue  # admit the next queued requests (or exit)
             greedy = all(sched.request_in(s).temperature <= 0 for s in active)
             step = self._decode_greedy if greedy else self._decode
+            step_args = ()
+            if paged:
+                # grow each active slot's table before its write crosses
+                # into an unallocated block (idle slots write into their
+                # own stale blocks or the trash block — both masked)
+                self._ensure_decode_blocks(active, lengths)
+                step_args = (jnp.asarray(self.tables),)
             out, self.cache = step(
                 self.params, self.cache, jnp.asarray(pending[:, None]),
-                jnp.asarray(lengths, jnp.int32))
+                jnp.asarray(lengths, jnp.int32), *step_args)
             # the batched step advances *every* slot's recurrent state
             # (idle rows included), so all slots are dirty from here on
             self._dirty[:] = True
@@ -270,13 +450,108 @@ class ServingEngine:
         width = _bucket(n, cap) if self._pad_prefill else n
         padded = np.zeros((1, width), np.int32)
         padded[0, :n] = tokens
-        logits, new_cache = self._prefill(
-            self.params, self.cache, jnp.asarray(padded),
-            jnp.int32(slot), base)
+        if self.kv_layout == "paged":
+            snap = None
+            if not persist:
+                snap = (self.alloc.snapshot(), self.tables[slot].copy(),
+                        list(self._slot_blocks[slot]))
+            self._prepare_prefill(slot, base, width)
+            logits, new_cache = self._prefill(
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.int32(slot), jnp.asarray(self.tables[slot]), base)
+            if snap is not None:
+                # one-shot scoring: roll the allocator and table back; the
+                # discarded blocks may hold scatter garbage, but a block is
+                # only ever read after being re-allocated *and* re-written
+                self.alloc.restore(snap[0])
+                self.tables[slot] = snap[1]
+                self._slot_blocks[slot] = snap[2]
+        else:
+            logits, new_cache = self._prefill(
+                self.params, self.cache, jnp.asarray(padded),
+                jnp.int32(slot), base)
         if persist:
             self.cache = new_cache
             self._dirty[slot] = True
         return np.asarray(logits[n - 1])
+
+    # ------------------------------------------------------------------
+    # Paged capacity management
+    # ------------------------------------------------------------------
+
+    def _cow_block(self, slot: int, table_index: int) -> None:
+        """Copy-on-write one table entry: copy the physical block, drop
+        this slot's reference to the shared original, re-point the table
+        at the private copy."""
+        blocks = self._slot_blocks[slot]
+        new = self.alloc.alloc(1)[0]
+        self.cache = copy_paged_block(self.cache, blocks[table_index], new)
+        self.alloc.decref(blocks[table_index])
+        blocks[table_index] = new
+        self.tables[slot, table_index] = new
+
+    def _prepare_prefill(self, slot: int, base: int, width: int) -> None:
+        """Make the slot's table cover positions [0, base + width):
+        copy-on-write a *shared* partial tail block (the prompt's first
+        token would land inside it), then allocate fresh private blocks
+        for the rest of the prefill window."""
+        bs = self.block_size
+        blocks = self._slot_blocks[slot]
+        if base % bs and blocks:
+            ti = base // bs  # the partially-filled tail block's table index
+            if self.alloc.refcount(blocks[ti]) > 1:  # shared: store/slots
+                self._cow_block(slot, ti)
+        need = self.alloc.blocks_for(base + width) - len(blocks)
+        if need > 0:
+            fresh = self.alloc.alloc(need)
+            self.tables[slot, len(blocks):len(blocks) + need] = fresh
+            blocks.extend(fresh)
+
+    def _ensure_decode_blocks(self, active, lengths) -> None:
+        """Before a decode step, extend each active slot's table so the
+        incoming token's write position is block-backed.  Allocations draw
+        down the slot's admission-time reservation."""
+        bs = self.block_size
+        for slot in active:
+            bi = int(lengths[slot]) // bs
+            blocks = self._slot_blocks[slot]
+            if bi == len(blocks):
+                fresh = self.alloc.alloc(1)[0]
+                self.tables[slot, bi] = fresh
+                blocks.append(fresh)
+                self._reserved[slot] = max(0, self._reserved[slot] - 1)
+            elif self.alloc.refcount(blocks[bi]) > 1:
+                # defensive: a decode write into a still-shared block
+                # (cannot happen after a >=1-token prefill, but COW is
+                # cheaper than a corrupted shared prefix)
+                self._cow_block(slot, bi)
+
+    def _blocks_needed(self, req: Request, base: int) -> int:
+        """Worst-case private blocks for a request's whole window:
+        prefill bucket, decode budget, and a possible tail-block COW."""
+        n = len(req.tokens)
+        cap = self.max_len - base
+        width = _bucket(n, cap) if self._pad_prefill else n
+        total = base + max(width, n + req.max_new)
+        return (self.alloc.blocks_for(total) - self.alloc.blocks_for(base)
+                + (1 if base % self.block_size else 0))
+
+    def _req_base(self, req: Request) -> int:
+        return (self.store.base_len(req.prefix) if req.prefix
+                else self.base_len)
+
+    def _can_admit(self, req: Request) -> bool:
+        """Free-block admission gate: the request's whole private window
+        must fit in the pool *net of other active slots' outstanding
+        reservations* — a seated slot never stalls (or dies) mid-decode
+        waiting for memory.  A True return reserves the window: the
+        scheduler admits exactly the requests this approves."""
+        need = self._blocks_needed(req, self._req_base(req))
+        outstanding = int(self._reserved.sum()) + self._reserved_pending
+        if need > self.alloc.free_count - outstanding:
+            return False
+        self._reserved_pending += need
+        return True
 
     @staticmethod
     def _sample_row(logits_row: np.ndarray, temperature: float,

@@ -20,15 +20,18 @@ period-section leaves on axis 1 (axis 0 is the scan's ``repeats`` dim).
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from functools import partial
-from typing import Dict
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels import ops
 from repro.models.attention import project_kv
 from repro.models.mla import _latent  # shared latent-cache constructor
+from repro.serving.block_pool import BlockAllocator
 
 _KV_KEYS = ("k", "v", "ckv", "kr")
 
@@ -165,6 +168,19 @@ def seat_prefix_row(cache, row, slot: int):
     return _map_rowwise(cache, row, seat)
 
 
+def take_prefix_row(materialized, batch_index: int = 0):
+    """Extract one batch row of a :func:`materialize_prefix` output as a
+    batch-free per-layer row dict."""
+
+    def take_row(c, _p, axis):
+        out = {}
+        for key, x in c.items():
+            out[key] = x[batch_index] if axis == 0 else x[:, batch_index]
+        return out
+
+    return _map_rowwise(materialized, None, take_row)
+
+
 class PrefixStore:
     """In-memory cache of materialized compressed prefixes, one per task.
 
@@ -180,13 +196,7 @@ class PrefixStore:
         self._base_len: Dict[str, int] = {}
 
     def put(self, name: str, materialized, batch_index: int = 0) -> str:
-        def take_row(c, _p, axis):
-            out = {}
-            for key, x in c.items():
-                out[key] = x[batch_index] if axis == 0 else x[:, batch_index]
-            return out
-
-        row = _map_rowwise(materialized, None, take_row)
+        row = take_prefix_row(materialized, batch_index)
         self._entries[name] = row
         self._base_len[name] = _row_base_len(row)
         return name
@@ -205,6 +215,181 @@ class PrefixStore:
         if name not in self._entries:
             raise KeyError(f"unknown prefix {name!r}; registered: "
                            f"{sorted(self._entries) or '(none)'}")
+
+    def __contains__(self, name) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def names(self):
+        return tuple(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-resident) prefixes
+# ---------------------------------------------------------------------------
+
+
+def write_prefix_row_to_blocks(cache, row, block_ids: List[int]):
+    """Scatter a batch-free prefix row's KV leaves into pool blocks.
+
+    ``block_ids`` are the physical blocks holding logical positions
+    ``[0, m)``; every layer writes the *same* block ids into its own pool
+    (one block table resolves every layer, vLLM-style).  Non-KV leaves
+    (ssm state) are left for per-slot seating via :func:`seat_prefix_row`.
+    """
+    ids = jnp.asarray(block_ids, jnp.int32)[None, :]  # (1, nbt)
+    zero = jnp.zeros((1,), jnp.int32)
+
+    def write(c, p, axis):
+        c = dict(c)
+        for key in _KV_KEYS:
+            if key in p:
+                if axis == 0:  # prefix section: pool (N, bs, ...), row (m, ...)
+                    c[key] = ops.paged_scatter(c[key], p[key][None], ids, zero)
+                else:  # period: pool (repeats, N, bs, ...), row (repeats, m, ...)
+                    c[key] = jax.vmap(
+                        lambda pool, new: ops.paged_scatter(pool, new[None],
+                                                            ids, zero)
+                    )(c[key], p[key])
+        return c
+
+    return _map_rowwise(cache, row, write)
+
+
+def copy_paged_block(cache, src: int, dst: int):
+    """Device-side copy of one physical block across every KV pool leaf —
+    the copy-on-write when a slot must write into a shared partial block."""
+
+    def cp(c, _p, axis):
+        c = dict(c)
+        for key in _KV_KEYS:
+            if key in c:
+                if axis == 0:
+                    c[key] = c[key].at[dst].set(c[key][src])
+                else:
+                    c[key] = c[key].at[:, dst].set(c[key][:, src])
+        return c
+
+    return _map_rowwise(cache, None, cp)
+
+
+def strip_kv_leaves(row) -> Optional[dict]:
+    """Drop block-resident KV leaves from a prefix row, keeping per-slot
+    state (ssm handoff).  Returns None when nothing remains to seat."""
+    found = [False]
+
+    def strip(c, _p, axis):
+        out = {k: v for k, v in c.items() if k not in _KV_KEYS}
+        if out:
+            found[0] = True
+        return out
+
+    stripped = _map_rowwise(row, None, strip)
+    return stripped if found[0] else None
+
+
+class PrefixSeatedError(RuntimeError):
+    """Refused to evict a prefix whose blocks are still seated in slots."""
+
+
+class PagedPrefixStore:
+    """Block-resident compressed prefixes with ref-counts and LRU eviction.
+
+    The paged counterpart of :class:`PrefixStore`: ``put`` scatters a
+    task's materialized KV into freshly allocated pool blocks *once*;
+    engines seat a task into a slot by pointing the slot's block table at
+    those blocks (``blocks()`` + ``BlockAllocator.incref``), so N slots on
+    one task share one physical copy.  The store holds one reference per
+    resident prefix; a block's refcount therefore exceeds 1 exactly while
+    some slot is seated on it.
+
+    ``capacity`` bounds the number of resident prefixes LRU-style:
+    inserting past capacity evicts the least-recently-used *unseated*
+    entry (seated entries are deferred — skipped over); if every resident
+    prefix is seated, :class:`PrefixSeatedError` is raised.  Explicitly
+    evicting a seated prefix always raises.
+    """
+
+    def __init__(self, cfg: ModelConfig, allocator: BlockAllocator,
+                 capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (or None)")
+        self.cfg = cfg
+        self.alloc = allocator
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, dict]" = OrderedDict()
+
+    def put(self, name: str, materialized, cache, batch_index: int = 0):
+        """Make ``materialized`` row ``batch_index`` block-resident under
+        ``name``.  Returns the updated Layerwise cache (pools are
+        functional jax arrays).  Re-putting an existing name replaces it —
+        which requires the old entry to be unseated."""
+        if name in self._entries:
+            self.evict(name)  # raises PrefixSeatedError if still seated
+        while self.capacity is not None and len(self._entries) >= self.capacity:
+            self._evict_lru()
+        row = take_prefix_row(materialized, batch_index)
+        base_len = _row_base_len(row)
+        blocks = self.alloc.alloc(self.alloc.blocks_for(base_len))
+        if blocks:
+            cache = write_prefix_row_to_blocks(cache, row, blocks)
+        self._entries[name] = {
+            "blocks": blocks,
+            "base_len": base_len,
+            "state": strip_kv_leaves(row),
+        }
+        return cache
+
+    def _evict_lru(self) -> None:
+        for name, entry in self._entries.items():  # oldest first
+            if not self._seated(entry):
+                self.evict(name)
+                return
+        raise PrefixSeatedError(
+            f"PrefixStore at capacity ({self.capacity}) and every resident "
+            "prefix is seated in a slot — grow the pool or finish requests")
+
+    def _seated(self, entry) -> bool:
+        return any(self.alloc.refcount(b) > 1 for b in entry["blocks"])
+
+    def seated(self, name: str) -> bool:
+        """True while at least one engine slot points at this prefix's
+        blocks (the store's own reference is not counted)."""
+        return self._seated(self._get(name, touch=False))
+
+    def evict(self, name: str) -> None:
+        """Release a prefix's blocks back to the pool.  Raises
+        :class:`PrefixSeatedError` while any slot is still seated on it —
+        freeing blocks under a live block table would let the allocator
+        hand them to another slot mid-decode."""
+        entry = self._get(name, touch=False)
+        if self._seated(entry):
+            raise PrefixSeatedError(
+                f"prefix {name!r} is seated in at least one slot")
+        for b in entry["blocks"]:
+            self.alloc.decref(b)
+        del self._entries[name]
+
+    # ---- lookups (refresh LRU recency) ----
+
+    def blocks(self, name: str) -> List[int]:
+        return list(self._get(name)["blocks"])
+
+    def base_len(self, name: str) -> int:
+        return self._get(name)["base_len"]
+
+    def state_row(self, name: str) -> Optional[dict]:
+        return self._get(name)["state"]
+
+    def _get(self, name: str, touch: bool = True) -> dict:
+        if name not in self._entries:
+            raise KeyError(f"unknown prefix {name!r}; registered: "
+                           f"{sorted(self._entries) or '(none)'}")
+        if touch:
+            self._entries.move_to_end(name)
+        return self._entries[name]
 
     def __contains__(self, name) -> bool:
         return name in self._entries

@@ -90,12 +90,19 @@ class Scheduler:
         assert state is not None, f"slot {slot} is free"
         return state.request
 
-    def admit(self) -> List[Tuple[int, Request]]:
+    def admit(self, can_seat=None) -> List[Tuple[int, Request]]:
         """Seat queued requests into free slots (FIFO). Returns the
-        (slot, request) pairs admitted this call."""
+        (slot, request) pairs admitted this call.
+
+        ``can_seat(request) -> bool`` gates admission on engine capacity
+        (the paged engine passes its free-block check).  Admission stays
+        strictly FIFO: the first request that does not fit stops the scan
+        — later, smaller requests are *not* admitted around it."""
         seated = []
         for slot in self.free_slots():
             if not self._queue:
+                break
+            if can_seat is not None and not can_seat(self._queue[0]):
                 break
             req = self._queue.popleft()
             self._slots[slot] = _SlotState(req)

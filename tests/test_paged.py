@@ -1,0 +1,357 @@
+"""Paged KV-cache tests: block allocator, ops-level paged/dense decode
+parity over ragged lengths (jnp + pallas-interpret), engine parity,
+copy-on-write isolation, admission gating, and PrefixStore LRU eviction
+with the seated-refcount guard."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import memcom
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.serving import (
+    BlockAllocationError,
+    BlockAllocator,
+    OutOfBlocksError,
+    PrefixSeatedError,
+    Request,
+    ServingEngine,
+    materialize_prefix,
+)
+
+
+# ---------------------------------------------------------------------------
+# Block allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_basics():
+    a = BlockAllocator(8, 4)  # block 0 reserved -> 7 usable
+    assert a.free_count == 7
+    blocks = a.alloc(3)
+    assert len(set(blocks)) == 3 and 0 not in blocks
+    assert a.free_count == 4
+    a.incref(blocks[0])
+    a.decref(blocks[0])
+    assert a.refcount(blocks[0]) == 1  # still held once
+    a.decref(blocks[0])
+    assert a.refcount(blocks[0]) == 0 and a.free_count == 5
+    with pytest.raises(BlockAllocationError):
+        a.decref(blocks[0])  # double free
+    with pytest.raises(BlockAllocationError):
+        a.incref(blocks[0])  # unallocated
+    with pytest.raises(OutOfBlocksError):
+        a.alloc(6)
+    assert a.blocks_for(0) == 0
+    assert a.blocks_for(4) == 1
+    assert a.blocks_for(5) == 2
+
+
+# ---------------------------------------------------------------------------
+# Ops-level parity: paged vs dense decode over ragged lengths
+# ---------------------------------------------------------------------------
+
+
+def _paged_copy(k, v, bs, rng):
+    """Split a dense (B, L, H, D) cache into a shuffled block pool plus
+    per-slot tables (pool block order deliberately non-contiguous)."""
+    B, L = k.shape[:2]
+    nb = L // bs
+    perm = rng.permutation(B * nb) + 1  # keep block 0 as the trash block
+    tables = perm.reshape(B, nb).astype(np.int32)
+    pool_k = np.zeros((B * nb + 1, bs) + k.shape[2:], k.dtype)
+    pool_v = np.zeros((B * nb + 1, bs) + v.shape[2:], v.dtype)
+    for b in range(B):
+        for j in range(nb):
+            pool_k[tables[b, j]] = k[b, j * bs:(j + 1) * bs]
+            pool_v[tables[b, j]] = v[b, j * bs:(j + 1) * bs]
+    return jnp.asarray(pool_k), jnp.asarray(pool_v), jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 1)])  # GQA and MQA folds
+def test_paged_decode_matches_dense(rng, impl, hq, hkv):
+    B, L, D, bs = 4, 64, 16, 8
+    lengths = jnp.asarray([1, 13, 40, 64], jnp.int32)  # ragged, incl. edges
+    k = np.asarray(rng.standard_normal((B, L, hkv, D)), np.float32)
+    v = np.asarray(rng.standard_normal((B, L, hkv, D)), np.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, hq, D)), jnp.float32)
+    pool_k, pool_v, tables = _paged_copy(k, v, bs, rng)
+
+    want = ops.decode_attention(q, jnp.asarray(k), jnp.asarray(v),
+                                lengths=lengths, impl="jnp")
+    got = ops.paged_decode_attention(q, pool_k, pool_v, block_tables=tables,
+                                     lengths=lengths, impl=impl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_paged_scatter_then_decode(rng):
+    """paged_scatter lands tokens at per-slot positions: scattering into
+    the pool equals writing the dense cache rows."""
+    B, L, H, D, bs = 2, 32, 2, 8, 8
+    starts = jnp.asarray([5, 11], jnp.int32)
+    k = np.asarray(rng.standard_normal((B, L, H, D)), np.float32)
+    new = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    pool, _, tables = _paged_copy(k, k, bs, rng)
+    pool = ops.paged_scatter(pool, new, tables, starts)
+    view = np.asarray(ops.paged_gather(pool, tables))
+    for b in range(B):
+        np.testing.assert_array_equal(view[b, int(starts[b])],
+                                      np.asarray(new)[b, 0])
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity and isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    return cfg, params, mc
+
+
+def _materialize(setup, rng, n=40):
+    cfg, params, mc = setup
+    src = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, n)), jnp.int32)
+    return materialize_prefix(params, cfg, memcom.compress(mc, cfg, src)[0])
+
+
+def test_paged_engine_matches_dense_ragged(setup, rng):
+    """Ragged prompts + shared prefix + mid-stream refill: token streams
+    identical across layouts (block_size 16 > m=8 so the prefix tail block
+    is partial — seat/COW/refill all exercised)."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    mat = _materialize(setup, rng)
+    prompts = [rng.integers(4, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 11, 3)]
+    outs = []
+    for layout, kw in (("dense", {}), ("paged", {"block_size": 16})):
+        eng = ServingEngine(cfg, params, slots=2, max_len=m + 24,
+                            kv_layout=layout, **kw)
+        eng.add_prefix("task", mat)
+        reqs = [Request(tokens=p, max_new=4, prefix="task") for p in prompts]
+        out = eng.serve(reqs)
+        outs.append([out[r.uid] for r in reqs])
+    for d, p in zip(*outs):
+        np.testing.assert_array_equal(d, p)
+
+
+def test_cow_isolation(setup, rng):
+    """Two slots seated on one task: slot 0 prefills + decodes (forcing a
+    copy-on-write of the shared partial tail block); slot 1's visible
+    prefix blocks stay bit-identical and its block table still names the
+    original shared blocks."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    mat = _materialize(setup, rng)
+    # block_size 16 > m=8: the whole prefix lives in one *partial* block,
+    # so slot 0's first prompt token must trigger the COW
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24,
+                        kv_layout="paged", block_size=16)
+    eng.add_prefix("task", mat)
+    eng.seat_prefix(0, "task")
+    eng.seat_prefix(1, "task")
+    shared = eng.store.blocks("task")
+    assert eng._slot_blocks[0] == shared and eng._slot_blocks[1] == shared
+
+    def slot1_view():
+        """Slot 1's visible cache content: every KV leaf of its blocks."""
+        tables = jnp.asarray(eng.tables[1:2])
+        leaves = []
+        for entry in eng.cache.get("prefix", []):
+            for key in ("k", "v", "ckv", "kr"):
+                if key in entry:
+                    leaves.append(np.asarray(
+                        ops.paged_gather(entry[key], tables))[:, :m])
+        for entry in eng.cache.get("period", {}).values():
+            for key in ("k", "v", "ckv", "kr"):
+                if key in entry:
+                    for r in range(entry[key].shape[0]):
+                        leaves.append(np.asarray(
+                            ops.paged_gather(entry[key][r], tables))[:, :m])
+        return leaves
+
+    before = slot1_view()
+    out = eng.serve([Request(tokens=rng.integers(4, cfg.vocab_size, 6)
+                             .astype(np.int32), max_new=5, prefix="task")])
+    assert len(out) == 1
+    # slot 0 went through serve -> COW: its tail block is now private
+    assert eng._slot_blocks[0] != shared
+    assert eng._slot_blocks[1] == shared  # untouched
+    after = slot1_view()
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)  # bit-identical
+
+
+def test_refill_frees_private_blocks_not_prefix(setup, rng):
+    """More requests than slots: refills free each slot's private blocks
+    back to the pool while the store's prefix blocks stay resident — the
+    allocator ends exactly where a fresh double-seat would."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    mat = _materialize(setup, rng)
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24,
+                        kv_layout="paged", block_size=8)
+    eng.add_prefix("task", mat)
+    prefix_blocks = set(eng.store.blocks("task"))
+    reqs = [Request(tokens=rng.integers(4, cfg.vocab_size, 4)
+                    .astype(np.int32), max_new=2, prefix="task")
+            for _ in range(6)]
+    eng.serve(reqs)
+    # prefix blocks still resident (store ref) and seated in the 2 slots
+    for b in prefix_blocks:
+        assert eng.alloc.refcount(b) >= 1
+    # every non-prefix allocated block is accounted to a live slot table
+    live = set(eng._slot_blocks[0]) | set(eng._slot_blocks[1]) | prefix_blocks
+    assert eng.alloc.used_count == len(live)
+
+
+def test_admission_gated_on_free_blocks(setup, rng):
+    """A pool that only fits one request's window at a time still serves
+    every request (admission defers, slots refill), and an impossible
+    request fails fast instead of deadlocking."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    mat = _materialize(setup, rng)
+    # prefix: 1 block; each request needs <= 2 private blocks (bucket 8 +
+    # decode) + COW headroom — 4 free blocks serve exactly one at a time
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 16,
+                        kv_layout="paged", block_size=8, num_blocks=6)
+    eng.add_prefix("task", mat)
+    prompts = [rng.integers(4, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(3)]
+    reqs = [Request(tokens=p, max_new=3, prefix="task") for p in prompts]
+    out = eng.serve(reqs)
+    assert len(out) == 3
+    solo = ServingEngine(cfg, params, slots=1, max_len=m + 16,
+                         kv_layout="paged", block_size=8)
+    solo.add_prefix("task", mat)
+    want = solo.serve([Request(tokens=prompts[0], max_new=3, prefix="task")])
+    np.testing.assert_array_equal(out[reqs[0].uid],
+                                  next(iter(want.values())))
+
+
+def test_admission_reserves_decode_windows(setup, rng):
+    """Two long-decoding requests whose prefill fits but whose *combined*
+    decode windows exceed the pool: the gate must reserve each admitted
+    request's whole window, deferring the second request instead of
+    letting both slots race the pool empty mid-decode."""
+    cfg, params, _ = setup
+    # 4 usable blocks; each request: 8-token prompt (1 block) + decode to
+    # 18 tokens (3 blocks total) -> both prefills fit (2 blocks), but the
+    # decode windows need 6 > 4
+    eng = ServingEngine(cfg, params, slots=2, max_len=24,
+                        kv_layout="paged", block_size=8, num_blocks=5)
+    prompts = [rng.integers(4, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    reqs = [Request(tokens=p, max_new=10) for p in prompts]
+    out = eng.serve(reqs)  # unfixed: OutOfBlocksError mid-decode
+    assert sorted(len(v) for v in out.values()) == [10, 10]
+    for p, r in zip(prompts, reqs):
+        solo = ServingEngine(cfg, params, slots=1, max_len=24,
+                             kv_layout="paged", block_size=8)
+        want = solo.serve([Request(tokens=p, max_new=10)])
+        np.testing.assert_array_equal(out[r.uid], next(iter(want.values())))
+
+
+def test_admission_gate_impossible_request(setup, rng):
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    mat = _materialize(setup, rng)
+    # 2 usable blocks: 1 holds the prefix, and a 9-token prompt (bucket 16)
+    # needs 2 more — impossible even after reclaiming free slots
+    tiny = ServingEngine(cfg, params, slots=1, max_len=m + 16,
+                         kv_layout="paged", block_size=8, num_blocks=3)
+    tiny.add_prefix("task", mat)
+    big = rng.integers(4, cfg.vocab_size, 9).astype(np.int32)
+    with pytest.raises(OutOfBlocksError):
+        tiny.serve([Request(tokens=big, max_new=3, prefix="task")])
+
+
+def test_paged_hybrid_recurrent_state(rng):
+    """Hybrid (attn+mamba) paged serving: recurrent leaves stay per-slot
+    and a slot turnover still clears them — identical requests before and
+    after a refill produce identical tokens."""
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    m = cfg.memcom.num_memory_tokens
+    mats = []
+    for _ in range(2):
+        src = jnp.asarray(rng.integers(4, cfg.vocab_size, (1, 24)), jnp.int32)
+        mats.append(materialize_prefix(params, cfg,
+                                       memcom.compress(mc, cfg, src)[0]))
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24,
+                        kv_layout="paged", block_size=16)
+    eng.add_prefix("A", mats[0])
+    eng.add_prefix("B", mats[1])
+    prompt = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+    reqs = [Request(tokens=prompt, max_new=3, prefix="A"),
+            Request(tokens=prompt, max_new=3, prefix="B"),
+            Request(tokens=prompt, max_new=3, prefix="A")]  # refills a slot
+    out = eng.serve(reqs)
+    np.testing.assert_array_equal(out[reqs[0].uid], out[reqs[2].uid])
+
+
+def test_paged_mla_engine_parity(rng):
+    """MLA latent cache paged vs dense (absorbed decode walks the latent
+    block pool)."""
+    cfg = get_smoke_config("deepseek-v2-236b")
+    params = tfm.init_params(cfg, 0)
+    prompts = [rng.integers(4, cfg.vocab_size, n).astype(np.int32)
+               for n in (4, 9)]
+    outs = []
+    for layout in ("dense", "paged"):
+        eng = ServingEngine(cfg, params, slots=2, max_len=24,
+                            kv_layout=layout)
+        out = eng.serve([Request(tokens=p, max_new=3) for p in prompts])
+        outs.append([out[k] for k in sorted(out)])
+    for d, p in zip(*outs):
+        np.testing.assert_array_equal(d, p)
+
+
+# ---------------------------------------------------------------------------
+# PrefixStore LRU eviction + seated guard
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_store_lru_eviction_and_seated_guard(setup, rng):
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 16,
+                        kv_layout="paged", block_size=8, prefix_capacity=2)
+    mats = [_materialize(setup, rng) for _ in range(3)]
+    eng.add_prefix("t0", mats[0])
+    eng.add_prefix("t1", mats[1])
+    eng.seat_prefix(0, "t0")
+
+    # capacity 2: inserting t2 must evict the LRU *unseated* entry (t1,
+    # even though t0 is older) and free its blocks
+    free_before = eng.alloc.free_count
+    eng.add_prefix("t2", mats[2])
+    assert "t1" not in eng.store and "t0" in eng.store and "t2" in eng.store
+    # t1's blocks went back to the pool and t2 drew the same number (the
+    # LIFO free list may hand t2 the very same ids)
+    assert eng.alloc.free_count == free_before
+
+    # explicit eviction of a seated prefix refuses
+    with pytest.raises(PrefixSeatedError):
+        eng.store.evict("t0")
+    assert eng.store.seated("t0") and not eng.store.seated("t2")
+
+    # all resident prefixes seated + at capacity -> put raises
+    eng.seat_prefix(1, "t2")
+    with pytest.raises(PrefixSeatedError):
+        eng.add_prefix("t3", mats[1])
+
+    # unseating (slot refill onto another task) makes t0 evictable again
+    eng.seat_prefix(0, "t2")
+    assert not eng.store.seated("t0")
+    eng.add_prefix("t3", mats[1])
+    assert "t0" not in eng.store
