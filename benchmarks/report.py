@@ -71,6 +71,16 @@ def render() -> str:
                   f"({ratio:.1f}× — structural, transfers to TPU)",
                   f"* CPU ms/token (informational): {s['ms_full']:.2f} → "
                   f"{s['ms_compressed']:.2f}", ""]
+        oc = s.get("online_compile")
+        if oc:
+            lines += [
+                "* online compile (cold task on the serving path): "
+                f"TTFT {oc['ttft_warm_s']*1e3:.1f} ms warm → "
+                f"{oc['ttft_cold_s']*1e3:.1f} ms cold; max decode gap "
+                f"{oc['interleaved']['decode_gap_max_s']*1e3:.1f} ms "
+                f"interleaved vs "
+                f"{oc['stalled']['decode_gap_max_s']*1e3:.1f} ms stalled",
+                ""]
 
     d = _load("deep_tradeoff")
     if d:

@@ -2,16 +2,23 @@
 against a compressed m-slot cache vs the full t-token cache, plus a
 continuous-batching scenario (two distinct compressed tasks, ragged
 prompts, per-slot stop budgets, mid-stream slot refill) measuring the
-multi-tenant serving shape end to end.
+multi-tenant serving shape end to end, and an ``online_compile`` section
+(cold-task time-to-first-token and the decode-throughput dip while a
+compile is in flight, interleaved vs fully stalled).
 
 Measures (CPU wall-clock, informational) and reports the structural
 ratios that transfer to TPU: per-step attended KV slots, cache bytes,
 attention FLOPs.  The 32k-decode roofline cells in EXPERIMENTS.md §Perf
 make the same comparison at production scale from the compiled dry-run.
+
+``--smoke`` swaps the cached pretrained target for a random-init one and
+shrinks the sweep — the CI-speed configuration that exercises the whole
+serving path (GitHub Actions runs it on every push).
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -26,10 +33,15 @@ from repro.serving.engine import materialize_prefix, write_prefix_to_cache
 from repro.utils.pytree import tree_bytes
 
 
-def run(ratio: int = 8, decode_steps: int = 16):
+def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False):
     import dataclasses
 
-    cfg0, target = C.get_or_pretrain_target()
+    if smoke:  # CI configuration: random target, no pretraining artifact
+        cfg0 = C.target_config()
+        target = tfm.init_params(cfg0, 0)
+        decode_steps = 4
+    else:
+        cfg0, target = C.get_or_pretrain_target()
     m = C.RATIOS[ratio]
     cfg0 = cfg0.replace(
         memcom=dataclasses.replace(cfg0.memcom, num_memory_tokens=m))
@@ -79,14 +91,20 @@ def run(ratio: int = 8, decode_steps: int = 16):
     print(f"cache-bytes ratio: {bytes_full / bytes_comp:.2f}x "
           f"(structural, transfers to TPU)\n")
 
-    cb = run_continuous_batching(cfg0, target, mc, m, rng)
-    pvd = run_paged_vs_dense(cfg0, target, mc, m, rng)
+    cb = run_continuous_batching(cfg0, target, mc, m, rng,
+                                 num_requests=4 if smoke else 8)
+    pvd = run_paged_vs_dense(cfg0, target, mc, m, rng,
+                             slot_counts=(1, 4) if smoke else (1, 4, 16),
+                             decode_steps=4 if smoke else 8)
+    oc = run_online_compile(cfg0, target, mc, m, rng,
+                            warm_new=12 if smoke else 24)
 
     C.write_result("serving_bench", {
         "ratio": ratio, "m": m, "t": t,
         "ms_full": sec_full * 1e3, "ms_compressed": sec_comp * 1e3,
         "cache_bytes_full": bytes_full, "cache_bytes_compressed": bytes_comp,
-        "continuous_batching": cb, "paged_vs_dense": pvd})
+        "continuous_batching": cb, "paged_vs_dense": pvd,
+        "online_compile": oc})
     return rows
 
 
@@ -227,5 +245,92 @@ def run_paged_vs_dense(cfg, target, mc, m, rng, *, slot_counts=(1, 4, 16),
     return out
 
 
+def run_online_compile(cfg, target, mc, m, rng, *, compile_budget=16,
+                       warm_new=24):
+    """The online prefix compiler on the serving path.  Two measurements:
+
+    * **time-to-first-token**, warm (prefix resident) vs cold (the
+      request carries raw shots and the engine compiles them first);
+    * **decode dip**: a warm slot decodes ``warm_new`` tokens while a
+      cold task compiles — ``interleaved`` bounds *source-pass* work to
+      ``compile_budget`` tokens between decode steps, ``stalled``
+      compiles the whole task in one gap.  The per-engine decode-gap
+      counters make the dip visible: the stalled run fits one decode
+      step inside the whole compile where the interleaved run fits one
+      per chunk, and the stalled max gap carries the full source pass
+      where the interleaved max gap carries one chunk plus the finish
+      pass (Memory-LLM + materialize — a single program in either mode,
+      since it consumes *all* H^i at once; at toy scale it dominates
+      both, so the gap ratio only opens up with the source length).
+    """
+    shots_warm = jnp.asarray(rng.integers(4, cfg.vocab_size,
+                                          (1, C.SOURCE_LEN)), jnp.int32)
+    shots_cold = rng.integers(4, cfg.vocab_size, C.SOURCE_LEN).astype(np.int32)
+    kv_warm = materialize_prefix(
+        target, cfg, memcom.compress(mc, cfg, shots_warm)[0])
+    prompt = rng.integers(4, cfg.vocab_size, 4).astype(np.int32)
+
+    def fresh_engine(budget):
+        eng = ServingEngine(cfg, target, slots=2, max_len=m + 8 + warm_new + 8,
+                            compressor=mc, compile_token_budget=budget)
+        eng.add_prefix("warm", kv_warm)
+        # untimed mirror of the measured workload (distinct shot content →
+        # its own task): compiles the prefill/decode programs *and* this
+        # budget's chunk/finish programs, so the timed run measures the
+        # serving loop, not jit tracing
+        warm_shots = rng.integers(4, cfg.vocab_size,
+                                  C.SOURCE_LEN).astype(np.int32)
+        eng.serve([Request(tokens=prompt, max_new=warm_new, prefix="warm"),
+                   Request(tokens=prompt, max_new=2, raw_shots=warm_shots)])
+        eng.reset_stats()
+        return eng
+
+    eng = fresh_engine(None)
+    t0 = time.perf_counter()
+    eng.serve([Request(tokens=prompt, max_new=1, prefix="warm")])
+    ttft_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eng.serve([Request(tokens=prompt, max_new=1, raw_shots=shots_cold)])
+    ttft_cold = time.perf_counter() - t0
+
+    out = {"compile_budget": compile_budget, "source_len": C.SOURCE_LEN,
+           "ttft_warm_s": ttft_warm, "ttft_cold_s": ttft_cold}
+    rows = [("ttft", "warm", f"{ttft_warm*1e3:.1f}", "-", "-"),
+            ("ttft", "cold", f"{ttft_cold*1e3:.1f}", "-", "-")]
+    for mode, budget in (("interleaved", compile_budget), ("stalled", None)):
+        eng = fresh_engine(budget)
+        reqs = [Request(tokens=prompt, max_new=warm_new, prefix="warm"),
+                Request(tokens=prompt, max_new=2, raw_shots=shots_cold)]
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        dt = time.perf_counter() - t0
+        es = eng.stats()["engine"]
+        gaps = max(es["decode_gaps"], 1)
+        out[mode] = {
+            "serve_s": dt,
+            "decode_steps": es["decode_steps"],
+            "decode_steps_during_compile": es["decode_steps_during_compile"],
+            "decode_gap_max_s": es["decode_gap_max_s"],
+            "decode_gap_mean_s": es["decode_gap_sum_s"] / gaps,
+        }
+        rows.append((mode, "warm+cold", f"{dt*1e3:.1f}",
+                     f"{es['decode_gap_max_s']*1e3:.1f}",
+                     es["decode_steps_during_compile"]))
+    print(C.fmt_table(rows, ("section", "request", "total ms (CPU)",
+                             "max decode gap ms", "decode during compile"))
+          + "\n")
+    print(f"decode steps inside the compile window: "
+          f"{out['interleaved']['decode_steps_during_compile']} interleaved "
+          f"vs {out['stalled']['decode_steps_during_compile']} stalled "
+          "(stalled pays the whole source pass in one gap; the finish "
+          "pass is one gap in both modes)\n")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="random-init target + shrunk sweep (CI speed)")
+    ap.add_argument("--ratio", type=int, default=8, choices=sorted(C.RATIOS))
+    args = ap.parse_args()
+    run(ratio=args.ratio, smoke=args.smoke)

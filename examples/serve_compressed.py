@@ -5,6 +5,11 @@ per-layer memory slots.  "Edge" side: a ServingEngine that never sees the
 raw shots — it seats the compressed cache once and answers every query
 against m slots instead of t tokens.
 
+Part two drops the cloud step entirely: requests carry their raw shots
+and the engine's *online prefix compiler* compresses the task on the
+serving path — the public API is just "submit requests"; nothing here
+calls compress/materialize_prefix for those tasks.
+
     PYTHONPATH=src python examples/serve_compressed.py
 """
 
@@ -16,6 +21,7 @@ from repro.core import memcom
 from repro.data import ICLTaskSpec, SyntheticVocab, build_manyshot_prompt, \
     make_episode, make_query
 from repro.models import transformer as tfm
+from repro.serving import Request
 from repro.serving.engine import ServingEngine, materialize_prefix
 from repro.utils.pytree import tree_bytes
 
@@ -51,6 +57,28 @@ for i in range(3):
     print(f"[edge] query {q.tolist()} -> predicted label "
           f"{pred - VOCAB.label_base} (true {label}) "
           f"{'✓' if pred - VOCAB.label_base == label else '✗ (untrained compressor)'}")
+
+# ---- edge, online: unseen tasks served straight from raw shots --------
+# No cloud step: the engine owns the compressor and compiles each unseen
+# task inside the serving loop — at most 32 source tokens per iteration
+# while other slots decode (idle engines, as here, finish the job in one
+# chunk).  The two requests for task B carry byte-identical shots, so
+# they share one compilation (single-flight, content-addressed).
+online = ServingEngine(cfg, target, slots=2, max_len=m + 16,
+                       compressor=compressor, compile_token_budget=32)
+task_b = ICLTaskSpec(VOCAB, num_labels=8, keys_per_label=4)
+episode_b = make_episode(task_b, rng)
+shots_b = build_manyshot_prompt(task_b, episode_b, rng, budget=96)
+queries = [make_query(task_b, episode_b, shots_b, rng)[0] for _ in range(2)]
+reqs = [Request(tokens=q, max_new=1, raw_shots=shots_b) for q in queries]
+out = online.serve(reqs)
+cs = online.stats()["compiler"]
+print(f"\n[edge/online] served {len(reqs)} raw-shot requests for an unseen "
+      f"task: {cs['jobs']} compile ({cs['chunks']} chunks, "
+      f"{cs['tokens']} source tokens), {cs['deduped']} deduped submit(s)")
+for r, q in zip(reqs, queries):
+    print(f"[edge/online] query {q.tolist()} -> next token "
+          f"{out[r.uid].tolist()}")
 
 print("\nNote: the compressor here is untrained — run benchmarks/run.py "
       "to see trained-compressor accuracy vs the fewer-shots baseline.")

@@ -22,7 +22,8 @@ prefix formats, and the serving-time handoff in one place.
 
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass, field, replace
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +155,106 @@ def compress(mc_params, cfg: ModelConfig, source_tokens=None, *,
     prefix = build_prefix(cfg, aux_m["omega"], aux_s["cache"])
     info = {"encoder_out": aux_s["encoder_out"]}
     return prefix, info
+
+
+# ---------------------------------------------------------------------------
+# Chunked (stateful) compression — the online-serving variant
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompressionState:
+    """Carry-over between :func:`compress_chunk` calls: the Source-LLM's
+    cache (KV for attention/MLA continuation, conv/ssm recurrence for
+    mamba) plus the per-layer hiddens H^i captured so far.
+
+    The state lets a t-token shot set compile in fixed-budget slices —
+    chunk k prefills positions [offset, offset+w) behind the cached
+    [0, offset) context, exactly the engine's prefill-continuation path —
+    so a serving loop can interleave compression with decode steps
+    (:mod:`repro.serving.compiler`).
+    """
+
+    cache: dict                      # Layerwise source cache (functional)
+    offset: int = 0                  # source tokens consumed so far
+    hiddens: List[dict] = field(default_factory=list)  # per-chunk H^i
+    encoder_out: Optional[jax.Array] = None
+
+
+def begin_compress(cfg: ModelConfig, batch: int, total_len: int, *,
+                   mc_params=None, encoder_frames=None,
+                   impl: str = "auto") -> CompressionState:
+    """Open a chunked compression over ``total_len`` source tokens.
+
+    Allocates a full Source-LLM cache (attention KV *and* recurrent
+    state — unlike the one-shot :func:`compress`, every family needs its
+    running context carried across chunk boundaries).
+    """
+    encoder_out = None
+    if cfg.encoder is not None and encoder_frames is not None:
+        assert mc_params is not None, "encoder configs need mc_params"
+        encoder_out = tfm.encode(mc_params["source"]["encoder"], cfg,
+                                 encoder_frames, impl=impl)
+    return CompressionState(cache=tfm.init_cache(cfg, batch, total_len),
+                            encoder_out=encoder_out)
+
+
+def compress_chunk(mc_params, cfg: ModelConfig, state: CompressionState,
+                   tokens, *, impl: str = "auto") -> CompressionState:
+    """Run the Source-LLM over one chunk of the shot set and fold the
+    result into ``state``.  ``tokens`` is (B, w); ``state.offset`` must be
+    a python int (the continuation slice is static, as in engine prefill —
+    one trace per (width, offset) pair).  Returns the advanced state."""
+    offset = state.offset
+    assert isinstance(offset, int)
+    _, aux = tfm.forward(
+        mc_params["source"], cfg, tokens=tokens, capture_hiddens=True,
+        cache=state.cache, cache_index=offset, mask_offset=offset,
+        encoder_out=state.encoder_out, logits=False, impl=impl)
+    return replace(state, cache=aux["cache"], offset=offset + tokens.shape[1],
+                   hiddens=state.hiddens + [aux["hiddens"]])
+
+
+def finish_compress(mc_params, cfg: ModelConfig, state: CompressionState, *,
+                    impl: str = "auto"):
+    """Close a chunked compression: concatenate the captured H^i along the
+    source-time axis, run the Memory-LLM once over the m memory tokens,
+    and package the per-layer prefix.  Same return shape as
+    :func:`compress`."""
+    assert state.hiddens, "no chunks were compressed"
+    if len(state.hiddens) == 1:
+        hiddens = state.hiddens[0]
+    else:  # time is axis -2 in both sections ((B,T,D) / (repeats,B,T,D))
+        hiddens = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=-2), *state.hiddens)
+    B = jax.tree.leaves(hiddens)[0].shape[-3]
+    mem = cfg.memcom.num_memory_tokens
+    mem_embeds = jnp.broadcast_to(
+        mc_params["mem_tokens"][None], (B, mem, cfg.d_model)
+    ).astype(mc_params["mem_tokens"].dtype)
+    _, aux_m = tfm.forward(
+        mc_params["memory_llm"], cfg, embeds=mem_embeds,
+        memcom={"params": _memx_wrap(mc_params["memx"]), "src": hiddens},
+        encoder_out=state.encoder_out, logits=False, impl=impl)
+    prefix = build_prefix(cfg, aux_m["omega"], state.cache)
+    return prefix, {"encoder_out": state.encoder_out}
+
+
+def compress_chunked(mc_params, cfg: ModelConfig, source_tokens, *,
+                     chunk_size: int, encoder_frames=None,
+                     impl: str = "auto"):
+    """Chunked :func:`compress`: identical output, computed in
+    ``chunk_size``-token slices with the Source-LLM cache carried across
+    slices (parity asserted in ``tests/test_compiler.py``)."""
+    T = source_tokens.shape[1]
+    state = begin_compress(cfg, source_tokens.shape[0], T,
+                           mc_params=mc_params,
+                           encoder_frames=encoder_frames, impl=impl)
+    for lo in range(0, T, chunk_size):
+        state = compress_chunk(mc_params, cfg, state,
+                               source_tokens[:, lo:lo + chunk_size],
+                               impl=impl)
+    return finish_compress(mc_params, cfg, state, impl=impl)
 
 
 def _memx_wrap(memx):

@@ -15,6 +15,14 @@ Stages:
      generate/classify traffic — more requests than slots is fine,
      finished slots refill mid-decode.
 
+``--raw-shots`` removes stage 1 from the critical path: requests carry
+their raw many-shot context and the engine's online PrefixCompiler
+compresses each unseen task *inside* the serving loop — in
+``--compile-budget``-token chunks interleaved with decode steps, so
+already-seated slots keep emitting tokens while a cold task compiles
+(single-flight: concurrent requests for one task share one compile).
+``--stats`` prints the engine's cache/compile counters either way.
+
 ``--kv-layout paged`` swaps the per-slot dense cache for the block-pool
 paged cache: every slot seated on the same task points its block table
 at one shared physical copy of the compressed prefix (copy-on-write on
@@ -66,12 +74,28 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical blocks in the paged pool (default: "
                          "slots+4 worst-case windows)")
+    ap.add_argument("--raw-shots", action="store_true",
+                    help="skip the offline compress stage: requests carry "
+                         "their raw many-shot context and the engine "
+                         "compiles each unseen task online, interleaved "
+                         "with decode")
+    ap.add_argument("--compile-budget", type=int, default=None,
+                    help="max source tokens compiled per serve-loop "
+                         "iteration (default: a whole task at once — "
+                         "decode stalls for the full compile)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print engine cache/compile counters after serving")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args()
     if args.tasks < 1 or args.slots < 1 or args.requests < 1:
         ap.error("--tasks, --slots and --requests must all be >= 1")
     if args.block_size < 1:
         ap.error("--block-size must be >= 1")
+    if args.compile_budget is not None and args.compile_budget < 1:
+        ap.error("--compile-budget must be >= 1")
+    if args.raw_shots and args.classify:
+        ap.error("--raw-shots serves generation traffic (classify goes "
+                 "through the offline seat path)")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -93,7 +117,10 @@ def main():
                         num_blocks=args.num_blocks)
     engine = ServingEngine(cfg, target, slots=args.slots,
                            max_len=m + 24 + args.max_new + 16,
-                           kv_layout=args.kv_layout, **paged_kw)
+                           kv_layout=args.kv_layout,
+                           compressor=compressor if args.raw_shots else None,
+                           compile_token_budget=args.compile_budget,
+                           **paged_kw)
 
     tasks, payload = [], 0
     t0 = time.perf_counter()
@@ -102,19 +129,27 @@ def main():
         episode = make_episode(task, rng)
         prompt = build_manyshot_prompt(task, episode, rng,
                                        budget=args.context_tokens)
-        prefix, _ = memcom.compress(compressor, cfg, jnp.asarray(prompt[None]))
-        kv = materialize_prefix(target, cfg, prefix)
-        name = engine.add_prefix(f"task{t}", kv)
-        tasks.append((name, task, episode, prompt))
-        payload += tree_bytes(kv)
+        if not args.raw_shots:  # stage 1: compress offline, register
+            prefix, _ = memcom.compress(compressor, cfg,
+                                        jnp.asarray(prompt[None]))
+            kv = materialize_prefix(target, cfg, prefix)
+            engine.add_prefix(f"task{t}", kv)
+            payload += tree_bytes(kv)
+        tasks.append((f"task{t}", task, episode, prompt))
     t_compress = time.perf_counter() - t0
-    print(f"[cloud] compressed {args.tasks}x{args.context_tokens} tokens -> "
-          f"{m} slots/layer each in {t_compress:.2f}s; "
-          f"payload {payload/1e3:.1f} KB total")
+    if args.raw_shots:
+        print(f"[edge] no offline stage: {args.tasks} task(s) will compile "
+              f"online, {'whole-task' if args.compile_budget is None else str(args.compile_budget) + '-token'} "
+              "chunks interleaved with decode")
+    else:
+        print(f"[cloud] compressed {args.tasks}x{args.context_tokens} tokens "
+              f"-> {m} slots/layer each in {t_compress:.2f}s; "
+              f"payload {payload/1e3:.1f} KB total")
     metrics = {"arch": cfg.name, "m": m, "tasks": args.tasks,
                "slots": args.slots, "context_tokens": args.context_tokens,
                "compress_s": t_compress, "payload_bytes": payload,
-               "kv_layout": args.kv_layout}
+               "kv_layout": args.kv_layout, "raw_shots": args.raw_shots,
+               "compile_budget": args.compile_budget}
     if args.kv_layout == "paged":
         print(f"[edge] paged pool: {engine.alloc.num_blocks} blocks x "
               f"{engine.block_size} tokens, "
@@ -139,11 +174,16 @@ def main():
               f"unless loaded from a checkpoint)")
         metrics.update(queries=args.requests, correct=hits, serve_s=dt)
     else:
-        # ragged prompts, round-robin over tasks, per-request stop budget
+        # ragged prompts, round-robin over tasks, per-request stop budget;
+        # with --raw-shots each request carries its task's many-shot
+        # context and the first request per task triggers the (deduped)
+        # online compile
         reqs = [
             Request(tokens=rng.integers(4, vocab.size,
                                         int(rng.integers(4, 12))),
                     max_new=args.max_new, prefix=tasks[i % len(tasks)][0],
+                    raw_shots=(tasks[i % len(tasks)][3]
+                               if args.raw_shots else None),
                     stop_token=None)
             for i in range(args.requests)
         ]
@@ -158,6 +198,16 @@ def main():
               f"attending to <= {m}+prompt slots/layer per request")
         metrics.update(requests=args.requests, generated=generated,
                        serve_s=dt, tokens_per_s=tok_s)
+        if args.raw_shots:
+            cs = engine.stats()["compiler"]
+            print(f"[edge] online compile: {cs['jobs']} job(s), "
+                  f"{cs['deduped']} deduped submit(s), {cs['chunks']} "
+                  f"chunk(s) / {cs['tokens']} source tokens")
+
+    if args.stats:
+        stats = engine.stats()
+        print("[stats]", json.dumps(stats, indent=1))
+        metrics["stats"] = stats
 
     if args.metrics:
         with open(args.metrics, "w") as f:

@@ -7,6 +7,12 @@ Two KV layouts share one engine API (``ServingEngine(kv_layout=...)``):
   so slots seated on the same compressed task share its prefix blocks
   (`docs/ARCHITECTURE.md` has the layout).
 
+Cold tasks need no offline step: a :class:`Request` carrying
+``raw_shots`` is parked ``waiting_on_prefix`` while the engine's
+:class:`PrefixCompiler` compresses the shots online — in fixed
+token-budget chunks interleaved with decode steps, single-flight per
+task — then materializes and seats the prefix and wakes the request.
+
 Everything imported here is CPU-safe: the pallas paged-attention kernel
 is reached only through :func:`repro.kernels.ops.paged_decode_attention`'s
 lazy dispatch (mirroring ``ops._resolve``), so ``from repro.serving
@@ -18,6 +24,7 @@ from repro.serving.block_pool import (
     BlockAllocator,
     OutOfBlocksError,
 )
+from repro.serving.compiler import CompileJob, PrefixCompiler
 from repro.serving.engine import ServingEngine, materialize_prefix
 from repro.serving.prefix_store import (
     PagedPrefixStore,
@@ -29,6 +36,7 @@ from repro.serving.scheduler import Request, Scheduler
 
 __all__ = [
     "ServingEngine", "Request", "Scheduler",
+    "PrefixCompiler", "CompileJob",
     "PrefixStore", "PagedPrefixStore", "PrefixSeatedError",
     "BlockAllocator", "BlockAllocationError", "OutOfBlocksError",
     "materialize_prefix", "write_prefix_to_cache",

@@ -1,0 +1,274 @@
+"""Online prefix compiler: many-shot compression inside the serving loop.
+
+The offline story (``launch/serve.py`` stage 1) assumes every ICL task's
+compressed prefix was materialized ahead of time.  The
+:class:`PrefixCompiler` removes that assumption: a :class:`~repro.serving
+.scheduler.Request` may carry its **raw shot tokens** (``raw_shots``),
+and the engine compiles them *on the inference path* —
+
+    raw shots ──compress_chunk×N──▶ prefix O^i ──materialize_prefix──▶
+    PrefixStore / PagedPrefixStore ──▶ waiting requests wake
+
+— in fixed token-budget chunks interleaved with decode steps, so slots
+already seated keep emitting tokens while a cold task compiles
+(``ServingEngine(compile_token_budget=…)`` sets the per-iteration
+budget; ``None`` compiles a whole task in one go, the stalled baseline
+measured by ``benchmarks/serving_bench.py``'s ``online_compile``
+section).
+
+Single-flight dedup: jobs are keyed by prefix name — requests that name
+the same task (or carry byte-identical shot sets, which hash to the same
+auto-generated name) share one compilation, however many arrive while it
+is in flight.
+
+The compiler is pure control plane + functional jax calls: it owns no
+engine state.  The engine drives it (``step``), installs finished
+prefixes into its store (handling paged LRU/`PrefixSeatedError`
+deferral), and wakes the scheduler's ``waiting_on_prefix`` requests.
+See docs/ARCHITECTURE.md for the request lifecycle.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core import memcom
+from repro.serving.prefix_store import materialize_prefix
+
+
+def pow2_bucket(n: int, floor: int) -> int:
+    """Snap ``n`` up to a power of two, at least ``floor`` — the one
+    bucketing rule for every shape the serving path compiles against
+    (engine prefill widths, compiler source-cache lengths)."""
+    return max(floor, 1 << (max(1, n) - 1).bit_length())
+
+
+def _bucket_len(n: int) -> int:
+    """Source-cache lengths snap to powers of two (min 16): the chunk
+    programs are keyed by (offset, width, cache_len), so tasks of similar
+    size share compilations; the unused cache tail is never read."""
+    return pow2_bucket(n, 16)
+
+#: job lifecycle (the ``compiling`` stage of the request lifecycle)
+_STAGES = ("queued", "compiling", "compiled", "installed")
+
+
+@dataclass
+class CompileJob:
+    """One task's compilation: raw shot tokens → materialized prefix.
+
+    ``status``: ``queued`` (no chunk run yet) → ``compiling`` (source
+    cache live, ``consumed`` of ``len(tokens)`` processed) → ``compiled``
+    (materialized prefix ready, not yet resident in the engine's store —
+    installation can be deferred under paged seat pressure) →
+    ``installed``.
+    """
+
+    name: str
+    tokens: np.ndarray                         # (T,) int32 shot tokens
+    status: str = "queued"
+    consumed: int = 0
+    state: Optional[memcom.CompressionState] = None
+    materialized: Optional[dict] = None        # set when status >= compiled
+    widths: List[int] = field(default_factory=list)  # chunk widths run
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError(f"job {self.name!r}: empty shot set")
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.consumed
+
+
+class PrefixCompiler:
+    """Compiles raw many-shot prompts into materialized prefixes, a
+    token-budgeted chunk at a time, with single-flight dedup per task.
+
+    Jobs advance strictly FIFO (one source cache lives at a time, so
+    in-flight compile memory is bounded by one task's window regardless
+    of queue depth).  ``step(budget)`` is the only compute entry point —
+    the serving loop calls it between decode steps.
+    """
+
+    def __init__(self, compressor, cfg: ModelConfig, target_params, *,
+                 impl: str = "auto"):
+        if cfg.memcom is None:
+            raise ValueError(f"{cfg.name}: ModelConfig.memcom is unset — "
+                             "nothing to compile prefixes with")
+        self.compressor = compressor
+        self.cfg = cfg
+        self.target_params = target_params
+        self.impl = impl
+        self._jobs: "OrderedDict[str, CompileJob]" = OrderedDict()
+        # compiled programs: chunk steps keyed by their static geometry
+        # (offset, width, cache_len), the finish/materialize pass by its
+        # chunk-width pattern.  All-but-last chunks share the budget width
+        # and the cache length is pow2-bucketed, so same-bucket tasks
+        # reuse programs; only the remainder chunk and the finish pass are
+        # per-(T mod budget) — recurrent families forbid padding the last
+        # chunk (pads would advance the SSM state).  Both caches are
+        # LRU-bounded so a long-lived engine serving many task lengths
+        # cannot accumulate programs forever.
+        self._chunk_jit: "OrderedDict[Tuple[int, int, int], object]" = \
+            OrderedDict()
+        self._finish_jit: "OrderedDict[Tuple[Tuple[int, ...], int], object]" \
+            = OrderedDict()
+        self._jit_cache_cap = 64
+        self.stats: Dict[str, int] = {
+            "jobs": 0,          # distinct compilations started
+            "deduped": 0,       # submits that joined an in-flight job
+            "chunks": 0,        # compress_chunk calls
+            "tokens": 0,        # source tokens consumed
+            "compiled": 0,      # jobs finished (materialized)
+        }
+
+    # ---- queue side ----
+
+    def submit(self, name: str, raw_shots) -> CompileJob:
+        """Request compilation of ``raw_shots`` under ``name``.
+
+        Single-flight: a second submit for a name whose job is still
+        queued/compiling/compiled joins that job (first writer wins on
+        the token content).  Installed jobs were dropped from the table,
+        so a name the store has since evicted is simply recompiled.
+        """
+        job = self._jobs.get(name)
+        if job is not None:
+            self.stats["deduped"] += 1
+            return job
+        job = CompileJob(name=name, tokens=raw_shots)
+        self._jobs[name] = job
+        self.stats["jobs"] += 1
+        return job
+
+    def job(self, name: str) -> CompileJob:
+        return self._jobs[name]
+
+    def has_compile_work(self) -> bool:
+        """Any job still consuming source tokens?"""
+        return any(j.status in ("queued", "compiling")
+                   for j in self._jobs.values())
+
+    def ready(self) -> List[str]:
+        """Names compiled but not yet installed into the engine's store."""
+        return [n for n, j in self._jobs.items() if j.status == "compiled"]
+
+    def pending(self) -> bool:
+        """Anything between submission and store residency?"""
+        return any(j.status != "installed" for j in self._jobs.values())
+
+    def mark_installed(self, name: str) -> None:
+        """Drop a job once its prefix is store-resident.  The entry is
+        deleted outright — keeping it would grow ``_jobs`` (and pin every
+        task's shot tokens) for the engine's lifetime; a resubmit after a
+        later store eviction simply opens a fresh job."""
+        job = self._jobs.pop(name)
+        assert job.status == "compiled", job.status
+        job.status = "installed"
+        job.materialized = None  # resident in the store now; drop our copy
+        job.state = None
+
+    # ---- compute side ----
+
+    @staticmethod
+    def _cached(cache: "OrderedDict", cap: int, key, make):
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache[key] = make()
+            while len(cache) > cap:
+                cache.popitem(last=False)  # drop the oldest program
+        else:
+            cache.move_to_end(key)
+        return fn
+
+    def _chunk_fn(self, offset: int, width: int, cache_len: int):
+        """One compiled chunk step.  Eager ``compress_chunk`` would
+        re-trace its scans every call — the whole point of chunking
+        (short, predictable gaps between decode steps) dies without jit —
+        so chunk programs are compiled once per static geometry and
+        reused across tasks."""
+        cfg, impl = self.cfg, self.impl
+
+        def make():
+            def run(compressor, cache, tokens):
+                state = memcom.CompressionState(cache=cache, offset=offset)
+                state = memcom.compress_chunk(compressor, cfg, state, tokens,
+                                              impl=impl)
+                return state.cache, state.hiddens[0]
+
+            return jax.jit(run)
+
+        return self._cached(self._chunk_jit, self._jit_cache_cap,
+                            (offset, width, cache_len), make)
+
+    def _finish_fn(self, widths: Tuple[int, ...], cache_len: int):
+        """Compiled finish: Memory-LLM pass over the accumulated H^i +
+        prefix packaging + materialization through the frozen target.
+        One program in either budget mode — the Memory-LLM cross-attends
+        *all* H^i at once, so this pass cannot be sliced the way the
+        source pass can (the one decode gap chunking does not bound)."""
+        cfg, impl, total = self.cfg, self.impl, sum(widths)
+
+        def make():
+            def run(compressor, target_params, cache, hiddens):
+                state = memcom.CompressionState(
+                    cache=cache, offset=total, hiddens=list(hiddens))
+                prefix, _ = memcom.finish_compress(compressor, cfg, state,
+                                                   impl=impl)
+                return materialize_prefix(target_params, cfg, prefix)
+
+            return jax.jit(run)
+
+        return self._cached(self._finish_jit, self._jit_cache_cap,
+                            (widths, cache_len), make)
+
+    def step(self, token_budget: Optional[int] = None) -> List[str]:
+        """Advance compilation by up to ``token_budget`` source tokens
+        (``None`` = run the head job to completion — the stalled
+        baseline).  Returns the names that finished this call."""
+        finished: List[str] = []
+        budget = token_budget
+        while True:
+            job = next((j for j in self._jobs.values()
+                        if j.status in ("queued", "compiling")), None)
+            if job is None or (budget is not None and budget <= 0):
+                break
+            if job.state is None:
+                job.state = memcom.begin_compress(
+                    self.cfg, 1, _bucket_len(len(job.tokens)),
+                    mc_params=self.compressor, impl=self.impl)
+                job.status = "compiling"
+            w = job.remaining if budget is None else min(job.remaining, budget)
+            chunk = jnp.asarray(job.tokens[None, job.consumed:job.consumed + w])
+            cache_len = _bucket_len(len(job.tokens))
+            fn = self._chunk_fn(job.consumed, w, cache_len)
+            cache, hid = fn(self.compressor, job.state.cache, chunk)
+            job.state = replace(job.state, cache=cache, offset=job.consumed + w,
+                                hiddens=job.state.hiddens + [hid])
+            job.consumed += w
+            job.widths.append(w)
+            self.stats["chunks"] += 1
+            self.stats["tokens"] += w
+            if budget is not None:
+                budget -= w
+            if job.remaining == 0:
+                fn = self._finish_fn(tuple(job.widths), cache_len)
+                job.materialized = fn(self.compressor, self.target_params,
+                                      job.state.cache,
+                                      tuple(job.state.hiddens))
+                job.state = None  # free the source cache
+                job.status = "compiled"
+                self.stats["compiled"] += 1
+                finished.append(job.name)
+                if budget is None:
+                    break  # None = one whole job, not the whole queue
+        return finished

@@ -38,7 +38,8 @@ See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +52,11 @@ from repro.serving.block_pool import (
     BlockAllocator,
     OutOfBlocksError,
 )
+from repro.serving.compiler import PrefixCompiler, pow2_bucket
 from repro.serving.prefix_store import (  # re-exported for compatibility
     _KV_KEYS,
     PagedPrefixStore,
+    PrefixSeatedError,
     PrefixStore,
     _map_rowwise,
     clear_slot_state,
@@ -65,8 +68,8 @@ from repro.serving.prefix_store import (  # re-exported for compatibility
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = [
-    "ServingEngine", "PrefixStore", "PagedPrefixStore", "Request",
-    "Scheduler", "materialize_prefix", "write_prefix_to_cache",
+    "ServingEngine", "PrefixStore", "PagedPrefixStore", "PrefixCompiler",
+    "Request", "Scheduler", "materialize_prefix", "write_prefix_to_cache",
 ]
 
 
@@ -113,7 +116,7 @@ def _bucket(n: int, cap: int) -> int:
     """Static prefill widths: next power of two (min 8), clamped to the
     slot's remaining cache space.  A handful of buckets ⇒ a handful of
     prefill compilations, ever."""
-    return max(1, min(max(8, 1 << (max(1, n) - 1).bit_length()), cap))
+    return max(1, min(pow2_bucket(n, 8), cap))
 
 
 class ServingEngine:
@@ -122,16 +125,35 @@ class ServingEngine:
                  prefix_store: Optional[PrefixStore] = None,
                  kv_layout: str = "dense", block_size: int = 8,
                  num_blocks: Optional[int] = None,
-                 prefix_capacity: Optional[int] = None):
+                 prefix_capacity: Optional[int] = None,
+                 compressor=None,
+                 compile_token_budget: Optional[int] = None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
+        if compile_token_budget is not None and compile_token_budget < 1:
+            raise ValueError("compile_token_budget must be >= 1 (or None)")
         self.cfg = cfg
         self.params = target_params
         self.slots = slots
         self.max_len = max_len
         self.impl = impl
         self.kv_layout = kv_layout
+        # online prefix compiler: requests carrying raw_shots compile their
+        # compressed prefix *on the serving path*, at most
+        # compile_token_budget source tokens per loop iteration (None =
+        # whole task at once — decode stalls for the full compile)
+        self.compile_token_budget = compile_token_budget
+        self.compiler = (PrefixCompiler(compressor, cfg, target_params,
+                                        impl=impl)
+                         if compressor is not None else None)
+        self.trace: List[Tuple] = []  # per-serve event log (tests/bench)
+        self._counters = {
+            "decode_steps": 0, "prefills": 0, "tokens_generated": 0,
+            "decode_steps_during_compile": 0, "compile_chunks_interleaved": 0,
+            "decode_gap_max_s": 0.0, "decode_gap_sum_s": 0.0,
+            "decode_gaps": 0,
+        }
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
         self._seated: List[Optional[str]] = [None] * slots  # named prefix
@@ -335,19 +357,24 @@ class ServingEngine:
         Returns {request.uid: generated tokens}.  Output includes the stop
         token when one fired.  More requests than slots is fine — finished
         slots are refilled mid-decode.
+
+        Requests carrying ``raw_shots`` whose prefix is not resident are
+        parked (``waiting_on_prefix``) while the engine's
+        :class:`PrefixCompiler` compiles them online: each loop iteration
+        runs one batched decode step for the seated slots, then at most
+        ``compile_token_budget`` source tokens of compilation — already-
+        seated slots keep emitting tokens throughout a compile.
         """
         sched = Scheduler(self.slots)
+        self.trace = []
+        requests = list(requests)
+        # validate the whole batch before the first side effect: a bad
+        # request must not leave earlier ones' compile jobs orphaned in
+        # the (engine-lifetime) compiler with their waiters discarded
         for req in requests:
-            # no-prefix requests land on either the engine-wide seated base
-            # or a slot reset to 0 — base_len is the worst case
-            base = (self.store.base_len(req.prefix) if req.prefix
-                    else self.base_len)
-            need = base + len(req.tokens) + req.max_new
-            if need > self.max_len:
-                raise ValueError(
-                    f"request {req.uid}: prefix+prompt+max_new={need} "
-                    f"exceeds max_len={self.max_len}")
-            sched.submit(req)
+            self._check_request(req)
+        for req in requests:
+            self._submit(sched, req)
 
         rng = np.random.default_rng(seed)
         results: Dict[int, np.ndarray] = {}
@@ -355,6 +382,7 @@ class ServingEngine:
         lengths = self.base.copy()  # per-slot valid cache length
         paged = self.kv_layout == "paged"
         can_seat = self._can_admit if paged else None
+        last_decode_done: Optional[float] = None
 
         def _finish(slot):
             req, toks = sched.finish(slot)
@@ -363,16 +391,15 @@ class ServingEngine:
             results[req.uid] = toks
 
         while sched.has_work():
+            if self.compiler is not None:
+                self._drain_compiler(sched)
             admitted = sched.admit(can_seat)
             if paged and not admitted and not sched.active_slots() \
                     and sched.pending:
                 # nothing running and the head request doesn't pass the
                 # free-block gate: reclaim every free slot's private
                 # blocks, then retry once — fail fast instead of spinning
-                for slot in sched.free_slots():
-                    self._release_slot_blocks(slot)
-                    self.base[slot] = 0
-                    self._seated[slot] = None
+                self._reclaim_free_slots(sched)
                 admitted = sched.admit(can_seat)
                 if not admitted:
                     raise OutOfBlocksError(
@@ -408,11 +435,19 @@ class ServingEngine:
                 lengths[slot] = self.base[slot] + len(req.tokens)
                 tok = self._sample_row(row_logits, req.temperature, rng)
                 pending[slot] = tok
+                self.trace.append(("admit", req.uid, slot))
                 if sched.record_token(slot, tok):
                     _finish(slot)
             active = sched.active_slots()
+            compiling = (self.compiler is not None
+                         and self.compiler.has_compile_work())
             if not active:
-                continue  # admit the next queued requests (or exit)
+                if compiling:
+                    # nothing decoding: an iteration's worth of compile
+                    # work stalls nobody — run the head job to completion
+                    # so cold-task time-to-first-token is as low as it gets
+                    self._compile_step(None)
+                continue  # admit the next queued/woken requests (or exit)
             greedy = all(sched.request_in(s).temperature <= 0 for s in active)
             step = self._decode_greedy if greedy else self._decode
             step_args = ()
@@ -422,6 +457,7 @@ class ServingEngine:
                 # own stale blocks or the trash block — both masked)
                 self._ensure_decode_blocks(active, lengths)
                 step_args = (jnp.asarray(self.tables),)
+            t_start = time.perf_counter()
             out, self.cache = step(
                 self.params, self.cache, jnp.asarray(pending[:, None]),
                 jnp.asarray(lengths, jnp.int32), *step_args)
@@ -429,14 +465,171 @@ class ServingEngine:
             # (idle rows included), so all slots are dirty from here on
             self._dirty[:] = True
             out = np.asarray(out)  # greedy: (slots,) ids; else full logits
+            if last_decode_done is not None:
+                # decode gap = non-decode time since the previous step —
+                # admissions, prefills, and (above all) compile chunks;
+                # the online_compile bench reads the dip off these counters
+                gap = t_start - last_decode_done
+                c = self._counters
+                c["decode_gap_max_s"] = max(c["decode_gap_max_s"], gap)
+                c["decode_gap_sum_s"] += gap
+                c["decode_gaps"] += 1
+            last_decode_done = time.perf_counter()
+            self._counters["decode_steps"] += 1
+            if compiling:
+                self._counters["decode_steps_during_compile"] += 1
+            self.trace.append(("decode", len(active)))
             for slot in active:
                 lengths[slot] += 1  # the step consumed this slot's token
                 tok = int(out[slot]) if greedy else self._sample_row(
                     out[slot], sched.request_in(slot).temperature, rng)
                 pending[slot] = tok
+                self._counters["tokens_generated"] += 1
                 if sched.record_token(slot, tok):
                     _finish(slot)
+            if compiling:
+                # interleave: at most compile_token_budget source tokens of
+                # compilation behind this decode step, then decode again
+                self._compile_step(self.compile_token_budget)
+                self._counters["compile_chunks_interleaved"] += 1
         return results
+
+    # ------------------------------------------------------------------
+    # Online prefix compilation (PrefixCompiler integration)
+    # ------------------------------------------------------------------
+
+    def _check_request(self, req: Request) -> None:
+        """Side-effect-free validation of one request (no counters, no
+        compile submission): raises the same errors `_submit` would."""
+        if req.prefix is not None and req.prefix not in self.store:
+            if req.raw_shots is None:
+                raise KeyError(
+                    f"unknown prefix {req.prefix!r}; registered: "
+                    f"{sorted(self.store.names()) or '(none)'}")
+            if self.compiler is None:
+                raise ValueError(
+                    f"request {req.uid} carries raw_shots but the engine "
+                    "has no compressor — pass ServingEngine(compressor=...)")
+            # worst-case seat: m memory slots (0 for state-only tasks)
+            base = self.cfg.memcom.num_memory_tokens if self.cfg.memcom else 0
+        elif req.prefix is not None:
+            base = self.store.base_len(req.prefix)
+        else:
+            # no-prefix requests land on either the engine-wide seated base
+            # or a slot reset to 0 — base_len is the worst case
+            base = self.base_len
+        self._validate_len(req, base)
+
+    def _submit(self, sched: Scheduler, req: Request) -> None:
+        """Route one (already validated) request into the scheduler:
+        resident prefix (or no prefix) goes straight to the FIFO queue; a
+        raw_shots request whose prefix is not resident is parked
+        ``waiting_on_prefix`` and its compilation is submitted
+        (single-flight — N requests for one task trigger one compile)."""
+        if req.prefix is not None:
+            hit = self.store.lookup(req.prefix)
+            if not hit:
+                self.compiler.submit(req.prefix, req.raw_shots)
+                sched.park(req)
+                self.trace.append(("park", req.uid, req.prefix))
+                return
+        sched.submit(req)
+
+    def _validate_len(self, req: Request, base: int) -> None:
+        need = base + len(req.tokens) + req.max_new
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prefix+prompt+max_new={need} "
+                f"exceeds max_len={self.max_len}")
+
+    def _compile_step(self, token_budget: Optional[int]) -> None:
+        before = self.compiler.stats["tokens"]
+        self.compiler.step(token_budget)
+        consumed = self.compiler.stats["tokens"] - before
+        if consumed:
+            self.trace.append(("compile", consumed))
+
+    def _drain_compiler(self, sched: Scheduler) -> None:
+        """Install at most one finished compilation into the store and
+        wake its waiting requests.  One per call on purpose: the woken
+        requests admit — and thereby seat/pin — the fresh prefix before a
+        *later* install's LRU eviction could reclaim it."""
+        ready = self.compiler.ready()
+        if not ready:
+            return
+        name = ready[0]
+        if not self._try_install(name, self.compiler.job(name).materialized,
+                                 sched):
+            return  # paged seat pressure: retry on a later iteration
+        self.compiler.mark_installed(name)
+        self.trace.append(("seat", name))
+        for req in sched.wake(name):
+            self.trace.append(("wake", req.uid, name))
+
+    def _try_install(self, name: str, materialized, sched: Scheduler) -> bool:
+        """Make a compiled prefix store-resident.  Dense never fails; the
+        paged store can hit LRU capacity with every resident prefix seated
+        (:class:`PrefixSeatedError`) or an exhausted pool
+        (:class:`OutOfBlocksError`) — then free slots' stale references
+        are released and the install retried; still failing, it is
+        deferred while anything is running, and raised only when nothing
+        ever could free capacity."""
+        if self.kv_layout != "paged":
+            self.store.put(name, materialized)
+            return True
+        # queued/waiting requests' prefixes must survive this install's LRU;
+        # the pin is scoped to the put calls (eviction only happens inside
+        # them) so a stale set can never block later add_prefix calls
+        self.store.pinned = sched.referenced_prefixes()
+        try:
+            try:
+                self.cache = self.store.put(name, materialized, self.cache)
+                return True
+            except (PrefixSeatedError, OutOfBlocksError):
+                # finished-but-not-reseated slots still hold block
+                # references; releasing a *free* slot's blocks is always safe
+                self._reclaim_free_slots(sched)
+            try:
+                self.cache = self.store.put(name, materialized, self.cache)
+                return True
+            except (PrefixSeatedError, OutOfBlocksError):
+                if sched.active_slots():
+                    return False  # a running slot will free capacity; defer
+                raise
+        finally:
+            self.store.pinned = set()
+
+    def reset_stats(self) -> None:
+        """Zero every counter (engine, store, compiler) — benches call this
+        after their untimed jit-warmup serves."""
+        for k in self._counters:
+            self._counters[k] = type(self._counters[k])(0)
+        for k in self.store.stats:
+            self.store.stats[k] = 0
+        if self.compiler is not None:
+            for k in self.compiler.stats:
+                self.compiler.stats[k] = 0
+
+    def stats(self) -> Dict[str, Optional[dict]]:
+        """Cache/compile behaviour counters: engine loop counts, the
+        prefix store's hit/miss/put/eviction counters, the online
+        compiler's job/chunk/dedup counters, and (paged) pool occupancy.
+        Reported by ``launch/serve.py --stats`` and read by the
+        ``online_compile`` section of ``benchmarks/serving_bench.py``."""
+        out: Dict[str, Optional[dict]] = {
+            "engine": dict(self._counters),
+            "prefix_store": dict(self.store.stats),
+            "compiler": (dict(self.compiler.stats)
+                         if self.compiler is not None else None),
+        }
+        if self.kv_layout == "paged":
+            out["pool"] = {
+                "num_blocks": self.alloc.num_blocks,
+                "block_size": self.block_size,
+                "blocks_used": self.alloc.used_count,
+                "blocks_free": self.alloc.free_count,
+            }
+        return out
 
     def _prefill_slot(self, slot: int, tokens: np.ndarray,
                       persist: bool = True) -> np.ndarray:
@@ -447,6 +640,7 @@ class ServingEngine:
         base = int(self.base[slot])
         cap = self.max_len - base
         assert 0 < n <= cap, (n, cap)
+        self._counters["prefills"] += 1
         width = _bucket(n, cap) if self._pad_prefill else n
         padded = np.zeros((1, width), np.int32)
         padded[0, :n] = tokens
@@ -478,6 +672,15 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # Paged capacity management
     # ------------------------------------------------------------------
+
+    def _reclaim_free_slots(self, sched: Scheduler) -> None:
+        """Release every *free* slot's block references (finished-but-not-
+        reseated slots still hold them) — always safe, and the shared
+        recovery move when the pool or the prefix store is out of room."""
+        for slot in sched.free_slots():
+            self._release_slot_blocks(slot)
+            self.base[slot] = 0
+            self._seated[slot] = None
 
     def _cow_block(self, slot: int, table_index: int) -> None:
         """Copy-on-write one table entry: copy the physical block, drop

@@ -194,12 +194,27 @@ class PrefixStore:
         self.cfg = cfg
         self._entries: Dict[str, dict] = {}
         self._base_len: Dict[str, int] = {}
+        self.stats = _new_store_stats()
 
     def put(self, name: str, materialized, batch_index: int = 0) -> str:
         row = take_prefix_row(materialized, batch_index)
         self._entries[name] = row
         self._base_len[name] = _row_base_len(row)
+        self.stats["puts"] += 1
         return name
+
+    def lookup(self, name: str) -> bool:
+        """Counted residency check — the serve-path ``hit``/``miss``
+        counters exposed through ``ServingEngine.stats()``."""
+        hit = name in self._entries
+        self.stats["hits" if hit else "misses"] += 1
+        return hit
+
+    def evict(self, name: str) -> None:
+        self._check(name)
+        del self._entries[name]
+        del self._base_len[name]
+        self.stats["evictions"] += 1
 
     def get(self, name: str) -> dict:
         self._check(name)
@@ -320,6 +335,18 @@ class PagedPrefixStore:
         self.alloc = allocator
         self.capacity = capacity
         self._entries: "OrderedDict[str, dict]" = OrderedDict()
+        self.stats = _new_store_stats()
+        # names the LRU must skip even when unseated: the engine keeps this
+        # set at the prefixes still referenced by queued or waiting_on_prefix
+        # requests (a parked request's freshly compiled prefix must survive
+        # until that request seats it)
+        self.pinned: set = set()
+
+    def lookup(self, name: str) -> bool:
+        """Counted residency check (see :meth:`PrefixStore.lookup`)."""
+        hit = name in self._entries
+        self.stats["hits" if hit else "misses"] += 1
+        return hit
 
     def put(self, name: str, materialized, cache, batch_index: int = 0):
         """Make ``materialized`` row ``batch_index`` block-resident under
@@ -340,16 +367,18 @@ class PagedPrefixStore:
             "base_len": base_len,
             "state": strip_kv_leaves(row),
         }
+        self.stats["puts"] += 1
         return cache
 
     def _evict_lru(self) -> None:
         for name, entry in self._entries.items():  # oldest first
-            if not self._seated(entry):
+            if name not in self.pinned and not self._seated(entry):
                 self.evict(name)
                 return
         raise PrefixSeatedError(
             f"PrefixStore at capacity ({self.capacity}) and every resident "
-            "prefix is seated in a slot — grow the pool or finish requests")
+            "prefix is seated in a slot or pinned by a waiting request — "
+            "grow the pool or finish requests")
 
     def _seated(self, entry) -> bool:
         return any(self.alloc.refcount(b) > 1 for b in entry["blocks"])
@@ -371,6 +400,7 @@ class PagedPrefixStore:
         for b in entry["blocks"]:
             self.alloc.decref(b)
         del self._entries[name]
+        self.stats["evictions"] += 1
 
     # ---- lookups (refresh LRU recency) ----
 
@@ -399,6 +429,15 @@ class PagedPrefixStore:
 
     def names(self):
         return tuple(self._entries)
+
+
+def _new_store_stats() -> Dict[str, int]:
+    """Cache-behaviour counters both stores expose via
+    ``ServingEngine.stats()``: serve-path residency ``hits``/``misses``
+    (:meth:`PrefixStore.lookup`), entries made resident (``puts``) and
+    entries released (``evictions`` — LRU, explicit, and re-put
+    replacement alike)."""
+    return {"hits": 0, "misses": 0, "puts": 0, "evictions": 0}
 
 
 def _row_base_len(row) -> int:

@@ -11,12 +11,21 @@ per-slot token budget, *independently* of every other slot).
 Finished slots return to the free pool immediately, so the next queued
 request is admitted mid-decode — no drain barrier, no recompilation (the
 decode step's shapes never change; only the per-slot length vector does).
+
+Requests whose compressed prefix does not exist yet (they carry
+``raw_shots`` for the online :class:`~repro.serving.compiler
+.PrefixCompiler`) sit in a fourth stage, **waiting_on_prefix**
+(:meth:`Scheduler.park`), until the engine installs the compiled prefix
+and :meth:`Scheduler.wake`\\ s them into the head of the FIFO queue:
+
+    waiting_on_prefix ──wake──▶ queued ──admit──▶ running ──▶ finished
 """
 
 from __future__ import annotations
 
+import hashlib
 import itertools
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -33,6 +42,14 @@ class Request:
     entry name — the compressed many-shot task memory this request attends
     to.  Requests with different prefixes batch together; each is seated
     per slot.
+
+    ``raw_shots``: optional (T,) raw many-shot context tokens.  When the
+    named prefix is not resident, the engine compiles these online
+    (chunked, interleaved with decode) instead of failing — the public
+    API for a cold task is *just submit the request*.  With no explicit
+    ``prefix`` the name is content-addressed from the shot bytes, so
+    byte-identical shot sets from different requests dedup onto one
+    compilation and one stored prefix.
     """
 
     tokens: np.ndarray                 # (S,) int32 prompt
@@ -40,6 +57,7 @@ class Request:
     prefix: Optional[str] = None       # PrefixStore entry name
     stop_token: Optional[int] = None
     temperature: float = 0.0
+    raw_shots: Optional[np.ndarray] = None  # (T,) int32 many-shot context
     uid: int = field(default_factory=lambda: next(_UIDS))
 
     def __post_init__(self):
@@ -48,6 +66,13 @@ class Request:
             raise ValueError("prompt must contain at least one token")
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.raw_shots is not None:
+            self.raw_shots = np.asarray(self.raw_shots, np.int32).reshape(-1)
+            if self.raw_shots.size == 0:
+                raise ValueError("raw_shots must contain at least one token")
+            if self.prefix is None:
+                digest = hashlib.sha1(self.raw_shots.tobytes()).hexdigest()
+                self.prefix = f"shots-{digest[:12]}"
 
 
 @dataclass
@@ -63,10 +88,23 @@ class Scheduler:
         self.num_slots = num_slots
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * num_slots
+        # waiting_on_prefix stage: prefix name -> requests parked until the
+        # online compiler makes that prefix resident
+        self._waiting: "OrderedDict[str, List[Request]]" = OrderedDict()
+        # arrival order (submit() and park() alike): woken requests re-enter
+        # the queue at their original position, never overtaking a request
+        # that arrived before them — whichever compile finished first
+        self._arrival = itertools.count()
+        self._order: dict = {}
 
     # ---- queue side ----
 
+    def _stamp(self, request: Request) -> None:
+        if request.uid not in self._order:
+            self._order[request.uid] = next(self._arrival)
+
     def submit(self, request: Request) -> int:
+        self._stamp(request)
         self._queue.append(request)
         return request.uid
 
@@ -75,7 +113,56 @@ class Scheduler:
         return len(self._queue)
 
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        return (bool(self._queue) or bool(self._waiting)
+                or any(s is not None for s in self._slots))
+
+    # ---- waiting_on_prefix stage ----
+
+    def park(self, request: Request) -> int:
+        """Hold a request until its (compiling) prefix becomes resident."""
+        assert request.prefix is not None, "parking needs a prefix name"
+        self._stamp(request)
+        self._waiting.setdefault(request.prefix, []).append(request)
+        return request.uid
+
+    @property
+    def num_waiting(self) -> int:
+        return sum(len(v) for v in self._waiting.values())
+
+    def waiting_names(self) -> Tuple[str, ...]:
+        return tuple(self._waiting)
+
+    def waiting_on(self, name: str) -> List[Request]:
+        return list(self._waiting.get(name, ()))
+
+    def wake(self, name: str) -> List[Request]:
+        """Move every request parked on ``name`` back into the FIFO queue
+        at its *original arrival position*: a woken request precedes
+        everything that arrived after it, but never overtakes a request
+        that arrived earlier (e.g. one woken by a previous install and
+        still queued).  Returns the woken requests."""
+        woken = self._waiting.pop(name, [])
+        for req in woken:
+            seq = self._order[req.uid]
+            idx = 0
+            for queued in self._queue:
+                if self._order[queued.uid] > seq:
+                    break
+                idx += 1
+            self._queue.insert(idx, req)
+        return woken
+
+    def referenced_prefixes(self) -> set:
+        """Prefix names some not-yet-finished request still depends on —
+        the engine pins these against LRU eviction (a running slot's
+        prefix is also block-refcount-protected; queued/waiting ones are
+        only protected by this set)."""
+        names = {r.prefix for r in self._queue if r.prefix is not None}
+        names.update(self._waiting)
+        for s in self._slots:
+            if s is not None and s.request.prefix is not None:
+                names.add(s.request.prefix)
+        return names
 
     # ---- slot side ----
 

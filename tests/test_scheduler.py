@@ -62,3 +62,61 @@ def test_request_validation():
         Request(tokens=np.arange(3), max_new=0)
     r = Request(tokens=[[1, 2, 3]], max_new=1)  # flattened + int32
     assert r.tokens.dtype == np.int32 and r.tokens.shape == (3,)
+
+
+def test_raw_shots_content_addressed_name():
+    shots = np.arange(5, 25, dtype=np.int32)
+    a = Request(tokens=[1], max_new=1, raw_shots=shots)
+    b = Request(tokens=[2], max_new=1, raw_shots=shots.copy())
+    c = Request(tokens=[3], max_new=1, raw_shots=shots[::-1].copy())
+    assert a.prefix == b.prefix  # same bytes -> one compile, one entry
+    assert a.prefix != c.prefix
+    named = Request(tokens=[4], max_new=1, raw_shots=shots, prefix="mine")
+    assert named.prefix == "mine"  # explicit name wins
+    with pytest.raises(ValueError):
+        Request(tokens=[1], max_new=1, raw_shots=np.empty((0,), np.int32))
+
+
+def test_park_wake_preserves_fifo_order():
+    """waiting_on_prefix requests wake to the *head* of the queue in
+    their submission order — a later plain request never overtakes them."""
+    s = Scheduler(2)
+    w1 = _req(prefix="cold")
+    w2 = _req(prefix="cold")
+    later = _req()
+    s.park(w1), s.park(w2)
+    s.submit(later)
+    assert s.has_work() and s.num_waiting == 2
+    assert s.waiting_names() == ("cold",)
+    assert [r.uid for r in s.waiting_on("cold")] == [w1.uid, w2.uid]
+    woken = s.wake("cold")
+    assert [r.uid for r in woken] == [w1.uid, w2.uid]
+    assert s.num_waiting == 0
+    seated = s.admit()
+    assert [r.uid for _, r in seated] == [w1.uid, w2.uid]  # before `later`
+    assert s.pending == 1
+    assert s.wake("cold") == []  # idempotent
+
+
+def test_wake_never_overtakes_earlier_arrivals():
+    """Two compiles finishing out of arrival order: whichever wakes
+    second still lands at its original position — R's requests (arrived
+    later) never overtake P's, and vice versa."""
+    for first, second in (("P", "R"), ("R", "P")):
+        s = Scheduler(1)
+        p1, p2 = _req(prefix="P"), _req(prefix="P")
+        r1, r2 = _req(prefix="R"), _req(prefix="R")
+        s.park(p1), s.park(p2), s.park(r1), s.park(r2)
+        s.wake(first), s.wake(second)
+        assert [r.uid for r in s._queue] == [p1.uid, p2.uid, r1.uid, r2.uid]
+
+
+def test_referenced_prefixes_spans_all_stages():
+    s = Scheduler(1)
+    s.park(_req(prefix="waiting"))
+    s.submit(_req(prefix="queued"))
+    s.submit(_req(prefix="running"))
+    s.submit(_req())  # no prefix -> not referenced
+    # admit seats the first queued request ("queued" enters a slot)
+    s.admit()
+    assert s.referenced_prefixes() == {"waiting", "queued", "running"}
