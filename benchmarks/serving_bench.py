@@ -19,6 +19,11 @@ serving path (GitHub Actions runs it on every push).
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -33,7 +38,8 @@ from repro.serving.engine import materialize_prefix, write_prefix_to_cache
 from repro.utils.pytree import tree_bytes
 
 
-def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False):
+def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False,
+        sharded: bool = True):
     import dataclasses
 
     if smoke:  # CI configuration: random target, no pretraining artifact
@@ -98,13 +104,14 @@ def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False):
                              decode_steps=4 if smoke else 8)
     oc = run_online_compile(cfg0, target, mc, m, rng,
                             warm_new=12 if smoke else 24)
+    sd = run_sharded_decode(smoke) if sharded else None
 
     C.write_result("serving_bench", {
         "ratio": ratio, "m": m, "t": t,
         "ms_full": sec_full * 1e3, "ms_compressed": sec_comp * 1e3,
         "cache_bytes_full": bytes_full, "cache_bytes_compressed": bytes_comp,
         "continuous_batching": cb, "paged_vs_dense": pvd,
-        "online_compile": oc})
+        "online_compile": oc, "sharded_decode": sd})
     return rows
 
 
@@ -327,10 +334,78 @@ def run_online_compile(cfg, target, mc, m, rng, *, compile_budget=16,
     return out
 
 
+def run_sharded_decode(smoke: bool, *, mesh_sizes=(1, 2, 4),
+                       layouts=("dense", "paged")):
+    """Per-step decode latency under tensor-parallel serving, dense and
+    paged, at mesh sizes 1/2/4 — the structural check that the engine
+    runs *unchanged* at every mesh size.
+
+    Each cell is a fresh ``repro.launch.serve --mesh N`` subprocess: the
+    host-platform device count locks at the first jax init, so every mesh
+    size needs its own forced placeholder topology.  On one physical CPU
+    the absolute ms/step therefore measures GSPMD partitioning overhead,
+    not speedup (the "devices" share one core); on a real multi-device
+    backend the same sweep measures the actual TP scaling, subprocess-free
+    flag included.
+    """
+    requests, max_new = (3, 4) if smoke else (6, 12)
+    out, rows = {}, []
+    for layout in layouts:
+        cells = out.setdefault(layout, [])
+        for n in mesh_sizes:
+            fd, path = tempfile.mkstemp(suffix=".json")
+            os.close(fd)
+            cmd = [sys.executable, "-m", "repro.launch.serve",
+                   "--arch", "smollm-135m", "--smoke",
+                   "--requests", str(requests), "--tasks", "2",
+                   "--slots", "2", "--max-new", str(max_new),
+                   "--kv-layout", layout, "--mesh", str(n),
+                   "--stats", "--metrics", path]
+            env = dict(
+                os.environ,
+                XLA_FLAGS=f"--xla_force_host_platform_device_count={n}")
+            try:
+                res = subprocess.run(cmd, capture_output=True, text=True,
+                                     timeout=900, env=env)
+                if res.returncode != 0:
+                    raise RuntimeError(
+                        f"sharded_decode cell (mesh={n}, {layout}) failed:\n"
+                        + res.stderr[-2000:])
+                with open(path) as f:
+                    metrics = json.load(f)
+            finally:
+                os.unlink(path)
+            es = metrics["stats"]["engine"]
+            steps = max(es["decode_steps"], 1)
+            cell = {
+                "mesh_model": n,
+                "decode_steps": es["decode_steps"],
+                "decode_time_s": es["decode_time_s"],
+                "ms_per_step": es["decode_time_s"] / steps * 1e3,
+                "serve_s": metrics["serve_s"],
+                "tokens_per_s": metrics["tokens_per_s"],
+            }
+            cells.append(cell)
+            rows.append((layout, f"1x{n}", es["decode_steps"],
+                         f"{cell['ms_per_step']:.2f}"))
+    print(C.fmt_table(
+        rows, ("kv layout", "mesh (data x model)", "decode steps",
+               "ms/step (CPU)")) + "\n")
+    print("sharded_decode: one subprocess per mesh size (device count "
+          "locks at jax init); on a single physical CPU the forced "
+          "devices share one core, so ms/step tracks partitioning "
+          "overhead — the speedup column needs real devices\n")
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="random-init target + shrunk sweep (CI speed)")
     ap.add_argument("--ratio", type=int, default=8, choices=sorted(C.RATIOS))
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded_decode subprocess sweep (the "
+                         "tier-1 CI job passes this; the sharded-smoke job "
+                         "runs the full set)")
     args = ap.parse_args()
-    run(ratio=args.ratio, smoke=args.smoke)
+    run(ratio=args.ratio, smoke=args.smoke, sharded=not args.no_sharded)

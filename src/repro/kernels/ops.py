@@ -106,8 +106,18 @@ def self_attention_causal(q, k, v, *, offset=0, softcap=0.0, scale=None,
         q_chunk=q_chunk, kv_chunk=kv_chunk, return_lse=return_lse)
 
 
+def _head_parallel(mesh, *operands, head_axis=2):
+    """True when a mesh with a >1 "model" axis is installed and every
+    head-carrying operand's head dim divides it — the condition for
+    splitting a decode kernel by head (GQA: Hq and Hkv must both split)."""
+    from repro.sharding.serving import model_axis_size
+
+    n = model_axis_size(mesh)
+    return n > 1 and all(x.shape[head_axis] % n == 0 for x in operands)
+
+
 def decode_attention(q, k, v, *, lengths, softcap=0.0, scale=None,
-                     impl="auto", kv_chunk=256):
+                     impl="auto", kv_chunk=256, mesh=None):
     """Per-slot length-aware decode attention (continuous batching).
 
     ``q`` (B, S, Hq, D) holds each slot's last S tokens; ``k``/``v``
@@ -119,11 +129,28 @@ def decode_attention(q, k, v, *, lengths, softcap=0.0, scale=None,
 
     The jnp path skips KV chunks beyond ``max(lengths)`` at runtime; the
     pallas path reuses the flash kernel with per-slot position masks.
+
+    ``mesh``: tensor-parallel serving.  Q/K/V split on the head axis over
+    the mesh's "model" axis while ``lengths`` stays replicated — the jnp
+    path is pinned head-parallel via a sharding constraint (GSPMD handles
+    the rest), the pallas path runs per-shard under ``shard_map`` (pallas
+    has no GSPMD partitioning rule).  Heads that don't divide the axis
+    fall back to the unsharded call.
     """
     B, S = q.shape[:2]
     small = S * k.shape[1] <= 256 * 256
     impl = _resolve(impl, small)
     if impl in ("dense", "pallas"):
+        if impl == "pallas" and _head_parallel(mesh, q, k, v):
+            from repro.sharding.serving import shard_map_heads
+
+            def per_shard(qs, ks, vs, lens):
+                return decode_attention(qs, ks, vs, lengths=lens,
+                                        softcap=softcap, scale=scale,
+                                        impl="pallas", mesh=None)
+
+            return shard_map_heads(per_shard, mesh, head_args=3,
+                                   replicated_args=1)(q, k, v, lengths)
         L = k.shape[1]
         slot = jnp.arange(L, dtype=jnp.int32)
         kv_pos = jnp.broadcast_to(slot[None, :], (B, L))
@@ -137,13 +164,19 @@ def decode_attention(q, k, v, *, lengths, softcap=0.0, scale=None,
             q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=True,
             softcap=softcap, scale=scale,
             interpret=jax.default_backend() != "tpu")
+    if _head_parallel(mesh, q, k, v):
+        from repro.sharding.serving import constrain_heads
+
+        q = constrain_heads(q, mesh)
+        k = constrain_heads(k, mesh)
+        v = constrain_heads(v, mesh)
     return jnp_impl.decode_attention_lengths(
         q, k, v, lengths=lengths, softcap=softcap, scale=scale,
         kv_chunk=kv_chunk)
 
 
 def paged_decode_attention(q, k_pool, v_pool, *, block_tables, lengths,
-                           softcap=0.0, scale=None, impl="auto"):
+                           softcap=0.0, scale=None, impl="auto", mesh=None):
     """Per-slot decode attention over a paged (block-pool) KV cache.
 
     ``q`` (B, S, Hq, D) holds each slot's last S tokens; ``k_pool`` /
@@ -160,6 +193,13 @@ def paged_decode_attention(q, k_pool, v_pool, *, block_tables, lengths,
     the tables with scalar-prefetched indices (one grid program per slot
     reusing the flash-decode inner loop); the dense path materializes each
     slot's view and defers to :func:`decode_attention`'s oracle.
+
+    ``mesh``: tensor-parallel serving.  Q and the physical pools split on
+    their head axis over the "model" mesh axis; ``block_tables`` and
+    ``lengths`` are replicated on every shard (the table resolves block
+    *indices*, identical per head shard — the control plane never shards).
+    The jnp path is pinned head-parallel with a sharding constraint; the
+    pallas path runs per-shard under ``shard_map``.
     """
     B, S = q.shape[:2]
     bs = k_pool.shape[1]
@@ -175,12 +215,29 @@ def paged_decode_attention(q, k_pool, v_pool, *, block_tables, lengths,
         return ref.attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
                                  causal=True, softcap=softcap, scale=scale)
     if impl == "pallas":
+        if _head_parallel(mesh, q, k_pool, v_pool):
+            from repro.sharding.serving import shard_map_heads
+
+            def per_shard(qs, ks, vs, tbl, lens):
+                return paged_decode_attention(
+                    qs, ks, vs, block_tables=tbl, lengths=lens,
+                    softcap=softcap, scale=scale, impl="pallas", mesh=None)
+
+            return shard_map_heads(per_shard, mesh, head_args=3,
+                                   replicated_args=2)(
+                q, k_pool, v_pool, block_tables, lengths)
         from repro.kernels import paged_attention  # lazy: TPU-targeted
 
         return paged_attention.paged_flash_decode(
             q, k_pool, v_pool, block_tables=block_tables, lengths=lengths,
             softcap=softcap, scale=scale,
             interpret=jax.default_backend() != "tpu")
+    if _head_parallel(mesh, q, k_pool, v_pool):
+        from repro.sharding.serving import constrain_heads
+
+        q = constrain_heads(q, mesh)
+        k_pool = constrain_heads(k_pool, mesh)
+        v_pool = constrain_heads(v_pool, mesh)
     return jnp_impl.paged_decode_attention_lengths(
         q, k_pool, v_pool, block_tables=block_tables, lengths=lengths,
         softcap=softcap, scale=scale)

@@ -30,6 +30,15 @@ the partial tail block), so prefix memory is O(tasks) instead of
 O(slots).  ``--block-size``/``--num-blocks`` size the pool; admission is
 gated on free blocks.  See docs/ARCHITECTURE.md.
 
+``--mesh M`` (or ``--mesh DxM``) runs the whole edge stage
+tensor-parallel: target params placed from their logical axes, KV
+caches/pools split by head over the mesh "model" axis, block tables and
+per-slot lengths replicated (see docs/ARCHITECTURE.md §"Sharded
+serving").  On a CPU host with too few devices the launcher forces
+``--xla_force_host_platform_device_count`` *before the first jax
+import* — so ``--mesh 2`` works on single-CPU CI out of the box;
+``--rules {baseline,fsdp}`` picks the weight-sharding rule set.
+
 On a fleet the same entry point runs with the production mesh and
 sharded weights (launch/steps.py `compress` + `decode` objectives are
 the dry-run-proven lowerings of stages 1 and 2).
@@ -37,7 +46,54 @@ the dry-run-proven lowerings of stages 1 and 2).
 
 from __future__ import annotations
 
-import argparse
+import os
+import sys
+
+
+def _parse_mesh(spec: str):
+    """"M" -> (1, M) model-parallel; "DxM" -> (data, model)."""
+    parts = spec.lower().split("x")
+    if len(parts) == 1:
+        data, model = 1, int(parts[0])
+    elif len(parts) == 2:
+        data, model = int(parts[0]), int(parts[1])
+    else:
+        raise ValueError(f"bad mesh spec {spec!r}: use M or DxM")
+    if data < 1 or model < 1:
+        raise ValueError(f"bad mesh spec {spec!r}: axes must be >= 1")
+    return data, model
+
+
+def _mesh_device_fallback() -> None:
+    """``--mesh N`` needs N devices, and the host-platform device count
+    locks at the first jax import — so peek at argv *before* any jax
+    import and force the placeholder topology when the operator has not
+    set XLA_FLAGS themselves.  Inert on real TPU backends (the flag only
+    affects the host platform)."""
+    spec = None
+    for i, arg in enumerate(sys.argv):
+        if arg.startswith("--mesh="):
+            spec = arg.split("=", 1)[1]
+        elif arg == "--mesh" and i + 1 < len(sys.argv):
+            spec = sys.argv[i + 1]
+    if not spec:
+        return
+    try:
+        data, model = _parse_mesh(spec)
+    except ValueError:
+        return  # let argparse report the malformed spec with context
+    existing = os.environ.get("XLA_FLAGS", "")
+    if data * model > 1 and \
+            "--xla_force_host_platform_device_count" not in existing:
+        # append rather than replace: unrelated XLA_FLAGS (fast-math etc.)
+        # must survive; an operator-forced device count always wins
+        os.environ["XLA_FLAGS"] = (existing + " " if existing else "") + \
+            f"--xla_force_host_platform_device_count={data * model}"
+
+
+_mesh_device_fallback()
+
+import argparse  # noqa: E402  (the device fallback must precede jax)
 import json
 import time
 
@@ -54,7 +110,10 @@ from repro.utils.pytree import tree_bytes
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    # no prefix abbreviations: the pre-jax-import device-count fallback
+    # scans argv for the literal --mesh, so an abbreviated --mes must be
+    # rejected here rather than silently skip the forced topology
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=6)
@@ -85,6 +144,14 @@ def main():
                          "decode stalls for the full compile)")
     ap.add_argument("--stats", action="store_true",
                     help="print engine cache/compile counters after serving")
+    ap.add_argument("--mesh", default=None,
+                    help="serve tensor-parallel: M (model-parallel ways) or "
+                         "DxM (data x model); forces the host device count "
+                         "on CPU so it runs anywhere")
+    ap.add_argument("--rules", choices=("baseline", "fsdp"),
+                    default="baseline",
+                    help="weight-sharding rule set for --mesh (baseline: "
+                         "tensor/expert parallel; fsdp: +embed over data)")
     ap.add_argument("--metrics", default=None)
     args = ap.parse_args()
     if args.tasks < 1 or args.slots < 1 or args.requests < 1:
@@ -115,11 +182,22 @@ def main():
     if args.kv_layout == "paged":
         paged_kw = dict(block_size=args.block_size,
                         num_blocks=args.num_blocks)
+    mesh = rules = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.sharding.rules import BASELINE_RULES, FSDP_RULES
+
+        data, model = _parse_mesh(args.mesh)
+        mesh = make_serving_mesh(model=model, data=data)
+        rules = {"baseline": BASELINE_RULES, "fsdp": FSDP_RULES}[args.rules]
+        print(f"[edge] tensor-parallel mesh {data}x{model} "
+              f"(data x model), rules={args.rules}")
     engine = ServingEngine(cfg, target, slots=args.slots,
                            max_len=m + 24 + args.max_new + 16,
                            kv_layout=args.kv_layout,
                            compressor=compressor if args.raw_shots else None,
                            compile_token_budget=args.compile_budget,
+                           mesh=mesh, rules=rules,
                            **paged_kw)
 
     tasks, payload = [], 0
@@ -149,7 +227,8 @@ def main():
                "slots": args.slots, "context_tokens": args.context_tokens,
                "compress_s": t_compress, "payload_bytes": payload,
                "kv_layout": args.kv_layout, "raw_shots": args.raw_shots,
-               "compile_budget": args.compile_budget}
+               "compile_budget": args.compile_budget,
+               "mesh": args.mesh, "rules": args.rules if args.mesh else None}
     if args.kv_layout == "paged":
         print(f"[edge] paged pool: {engine.alloc.num_blocks} blocks x "
               f"{engine.block_size} tokens, "

@@ -100,9 +100,13 @@ def apply_attention(
     kv_source=None,
     decode: bool = False,
     block_tables=None,
+    mesh=None,
     impl: str = "auto",
 ):
-    """Returns (out (B,S,D), new_cache_or_None).
+    """Returns (out (B,S,D), new_cache_or_None).  ``mesh`` (tensor-parallel
+    serving) reaches the decode kernels, which split Q/K/V by head over
+    its "model" axis while per-slot lengths and block tables stay
+    replicated — see :mod:`repro.sharding.serving`.
 
     With ``block_tables`` (B, nb) the cache entries are *paged*: ``k``/``v``
     are shared ``(num_blocks, block_size, Hkv, hd)`` pools and slot ``b``'s
@@ -152,7 +156,7 @@ def apply_attention(
             out = ops.paged_decode_attention(
                 q, k_pool, v_pool, block_tables=block_tables,
                 lengths=cache_index + S, softcap=softcap, scale=scale,
-                impl=impl)
+                impl=impl, mesh=mesh)
             return out.reshape(B, S, -1) @ p["wo"], {"k": k_pool, "v": v_pool}
         if jnp.ndim(cache_index) == 1:
             # per-slot lengths (continuous batching): each slot writes at its
@@ -162,7 +166,7 @@ def apply_attention(
             out = ops.decode_attention(
                 q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                 lengths=cache_index + S, softcap=softcap, scale=scale,
-                impl=impl)
+                impl=impl, mesh=mesh)
             return out.reshape(B, S, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=1)

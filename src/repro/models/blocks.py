@@ -61,6 +61,7 @@ def apply_block(
     cache_index=None,
     decode: bool = False,
     block_tables=None,
+    mesh=None,
     encoder_out=None,
     memcom: Optional[dict] = None,
     impl: str = "auto",
@@ -83,7 +84,7 @@ def apply_block(
         o, c = apply_attention(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, block_tables=block_tables, impl=impl)
+            decode=decode, block_tables=block_tables, mesh=mesh, impl=impl)
         if c is not None:
             new_cache.update(c)
     elif desc.mixer == "mla":
@@ -93,7 +94,7 @@ def apply_block(
         o, c = apply_mla(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, block_tables=block_tables, impl=impl)
+            decode=decode, block_tables=block_tables, mesh=mesh, impl=impl)
         if c is not None:
             new_cache.update(c)
     else:  # mamba

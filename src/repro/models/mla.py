@@ -83,9 +83,17 @@ def apply_mla(
     cache_index=None,
     decode: bool = False,
     block_tables=None,
+    mesh=None,
     impl: str = "auto",
 ):
     """Returns (out, new_cache_or_None).  Cache = {"ckv", "kr"}.
+
+    ``mesh`` is accepted for decode-kernel parity with
+    :func:`repro.models.attention.apply_attention` but the absorbed-MQA
+    decode runs with a *single* shared latent KV head — nothing to split
+    on the model axis, so the latent cache stays replicated and the
+    kernels fall back to their unsharded form (the per-head q_abs/out
+    einsums around them still partition under GSPMD).
 
     With ``block_tables`` the latent cache is paged: ``ckv``/``kr`` are
     ``(num_blocks, block_size, ...)`` pools indexed per slot through the
@@ -134,11 +142,11 @@ def apply_mla(
             o_lat = ops.paged_decode_attention(
                 q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
                 block_tables=block_tables, lengths=cache_index + S,
-                scale=scale, impl=impl)
+                scale=scale, impl=impl, mesh=mesh)
         elif per_slot:
             o_lat = ops.decode_attention(
                 q_eff, k_eff.astype(q_eff.dtype), v_eff.astype(q_eff.dtype),
-                lengths=cache_index + S, scale=scale, impl=impl)
+                lengths=cache_index + S, scale=scale, impl=impl, mesh=mesh)
         else:
             max_len = k_eff.shape[1]
             slot = jnp.arange(max_len, dtype=jnp.int32)

@@ -176,6 +176,7 @@ def forward(
     cache_index=None,
     decode: bool = False,
     block_tables=None,  # (B, nb) int32: paged-cache block tables
+    mesh=None,  # tensor-parallel serving mesh (reaches the decode kernels)
 
     capture_hiddens: bool = False,
     memcom: Optional[dict] = None,  # {"params": Layerwise, "src": Layerwise}
@@ -239,8 +240,8 @@ def forward(
         return apply_block(
             p, cfg, desc, h, positions=positions, mask_offset=mask_offset,
             prefix=lpre, cache=lcache, cache_index=cache_index, decode=decode,
-            block_tables=block_tables, encoder_out=encoder_out, memcom=mem,
-            impl=impl)
+            block_tables=block_tables, mesh=mesh, encoder_out=encoder_out,
+            memcom=mem, impl=impl)
 
     for i, desc in enumerate(cfg.layout.prefix):
         if capture_hiddens:

@@ -41,6 +41,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import memcom
 from repro.serving.prefix_store import materialize_prefix
+from repro.sharding.rules import BASELINE_RULES
+from repro.sharding.serving import constrain_cache
 
 
 def pow2_bucket(n: int, floor: int) -> int:
@@ -100,7 +102,7 @@ class PrefixCompiler:
     """
 
     def __init__(self, compressor, cfg: ModelConfig, target_params, *,
-                 impl: str = "auto"):
+                 impl: str = "auto", mesh=None, rules=None):
         if cfg.memcom is None:
             raise ValueError(f"{cfg.name}: ModelConfig.memcom is unset — "
                              "nothing to compile prefixes with")
@@ -108,6 +110,12 @@ class PrefixCompiler:
         self.cfg = cfg
         self.target_params = target_params
         self.impl = impl
+        # tensor-parallel serving: the finish pass pins the materialized
+        # per-layer KV to the engine's head-sharded pool layout, so a
+        # fresh compile lands directly in the sharded store/pools — no
+        # replicated detour (and no host gather) on the install path
+        self.mesh = mesh
+        self.rules = rules
         self._jobs: "OrderedDict[str, CompileJob]" = OrderedDict()
         # compiled programs: chunk steps keyed by their static geometry
         # (offset, width, cache_len), the finish/materialize pass by its
@@ -217,6 +225,7 @@ class PrefixCompiler:
         *all* H^i at once, so this pass cannot be sliced the way the
         source pass can (the one decode gap chunking does not bound)."""
         cfg, impl, total = self.cfg, self.impl, sum(widths)
+        mesh, rules = self.mesh, self.rules
 
         def make():
             def run(compressor, target_params, cache, hiddens):
@@ -224,7 +233,11 @@ class PrefixCompiler:
                     cache=cache, offset=total, hiddens=list(hiddens))
                 prefix, _ = memcom.finish_compress(compressor, cfg, state,
                                                    impl=impl)
-                return materialize_prefix(target_params, cfg, prefix)
+                out = materialize_prefix(target_params, cfg, prefix)
+                if mesh is not None:
+                    out = constrain_cache(out, mesh,
+                                          rules or BASELINE_RULES)
+                return out
 
             return jax.jit(run)
 

@@ -47,6 +47,8 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import transformer as tfm
+from repro.sharding import rules as sharding_rules
+from repro.sharding.serving import constrain_cache, shard_cache
 from repro.serving.block_pool import (
     TRASH_BLOCK,
     BlockAllocator,
@@ -127,32 +129,50 @@ class ServingEngine:
                  num_blocks: Optional[int] = None,
                  prefix_capacity: Optional[int] = None,
                  compressor=None,
-                 compile_token_budget: Optional[int] = None):
+                 compile_token_budget: Optional[int] = None,
+                 mesh=None, rules=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
         if compile_token_budget is not None and compile_token_budget < 1:
             raise ValueError("compile_token_budget must be >= 1 (or None)")
         self.cfg = cfg
-        self.params = target_params
         self.slots = slots
         self.max_len = max_len
         self.impl = impl
         self.kv_layout = kv_layout
+        # tensor-parallel serving: params placed via their logical-axis
+        # tree, KV caches/pools split by head over the mesh "model" axis,
+        # block tables and per-slot lengths replicated host-side — the
+        # python control plane (scheduler, allocator, stores) is
+        # mesh-oblivious by construction
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            self.rules = rules if rules is not None else \
+                sharding_rules.BASELINE_RULES
+            target_params = jax.device_put(
+                target_params,
+                sharding_rules.logical_to_shardings(
+                    target_params, tfm.param_specs(cfg), mesh, self.rules))
+        elif rules is not None:
+            raise ValueError("rules given without a mesh")
+        self.params = target_params
         # online prefix compiler: requests carrying raw_shots compile their
         # compressed prefix *on the serving path*, at most
         # compile_token_budget source tokens per loop iteration (None =
         # whole task at once — decode stalls for the full compile)
         self.compile_token_budget = compile_token_budget
-        self.compiler = (PrefixCompiler(compressor, cfg, target_params,
-                                        impl=impl)
+        self.compiler = (PrefixCompiler(compressor, cfg, self.params,
+                                        impl=impl, mesh=mesh,
+                                        rules=self.rules)
                          if compressor is not None else None)
         self.trace: List[Tuple] = []  # per-serve event log (tests/bench)
         self._counters = {
             "decode_steps": 0, "prefills": 0, "tokens_generated": 0,
             "decode_steps_during_compile": 0, "compile_chunks_interleaved": 0,
             "decode_gap_max_s": 0.0, "decode_gap_sum_s": 0.0,
-            "decode_gaps": 0,
+            "decode_gaps": 0, "decode_time_s": 0.0,
         }
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
@@ -191,32 +211,43 @@ class ServingEngine:
             self.cache = tfm.init_cache(cfg, slots, max_len)
             self.store = (prefix_store if prefix_store is not None
                           else PrefixStore(cfg))
+        # KV stripes/pools split by head on the "model" axis, recurrent
+        # state by channel/head; everything non-divisible replicates
+        self.cache = shard_cache(self.cache, mesh, self.rules)
+        rules = self.rules
+
+        def pin(cache):
+            # hold the step *outputs* to the seeded cache layout — left to
+            # itself GSPMD drifts (e.g. re-sharding KV on head_dim), and
+            # every later step then pays a reshard of the whole pool
+            return constrain_cache(cache, mesh, rules)
 
         def prefill_fn(params, cache, tokens, slot, base):
             row = _slice_slot(cache, slot)
             logits, aux = tfm.forward(
                 params, cfg, tokens=tokens, cache=row, cache_index=base,
-                mask_offset=base, impl=impl)
-            return logits[0], _merge_slot(cache, aux["cache"], slot)
+                mask_offset=base, mesh=mesh, impl=impl)
+            return logits[0], pin(_merge_slot(cache, aux["cache"], slot))
 
         def paged_prefill_fn(params, cache, tokens, slot, table_row, base):
             row = _slice_slot_paged(cache, slot)
             logits, aux = tfm.forward(
                 params, cfg, tokens=tokens, cache=row, cache_index=base,
-                mask_offset=base, block_tables=table_row[None, :], impl=impl)
-            return logits[0], _merge_slot_paged(cache, aux["cache"], slot)
+                mask_offset=base, block_tables=table_row[None, :], mesh=mesh,
+                impl=impl)
+            return logits[0], pin(_merge_slot_paged(cache, aux["cache"], slot))
 
         def decode_fn(params, cache, tok, lengths):
             logits, aux = tfm.forward(
                 params, cfg, tokens=tok, cache=cache, cache_index=lengths,
-                decode=True, impl=impl)
-            return logits[:, -1], aux["cache"]
+                decode=True, mesh=mesh, impl=impl)
+            return logits[:, -1], pin(aux["cache"])
 
         def paged_decode_fn(params, cache, tok, lengths, tables):
             logits, aux = tfm.forward(
                 params, cfg, tokens=tok, cache=cache, cache_index=lengths,
-                decode=True, block_tables=tables, impl=impl)
-            return logits[:, -1], aux["cache"]
+                decode=True, block_tables=tables, mesh=mesh, impl=impl)
+            return logits[:, -1], pin(aux["cache"])
 
         def greedy(step):
             def fn(params, cache, tok, lengths, *rest):
@@ -376,7 +407,20 @@ class ServingEngine:
         for req in requests:
             self._submit(sched, req)
 
-        rng = np.random.default_rng(seed)
+        # per-request sampling streams: folding Request.uid into the seed
+        # makes each request's tokens a function of (seed, request) alone —
+        # one shared stream would make sampled outputs depend on admission
+        # order and slot interleaving (whichever slot sampled first stole
+        # the next draw)
+        streams: Dict[int, np.random.Generator] = {}
+
+        def _stream(req: Request) -> np.random.Generator:
+            rng = streams.get(req.uid)
+            if rng is None:
+                rng = streams[req.uid] = np.random.default_rng(
+                    np.random.SeedSequence([int(seed), int(req.uid)]))
+            return rng
+
         results: Dict[int, np.ndarray] = {}
         pending = np.zeros((self.slots,), np.int32)  # next token per slot
         lengths = self.base.copy()  # per-slot valid cache length
@@ -388,6 +432,7 @@ class ServingEngine:
             req, toks = sched.finish(slot)
             if paged:
                 self._reserved[slot] = 0  # unused decode headroom returns
+            streams.pop(req.uid, None)
             results[req.uid] = toks
 
         while sched.has_work():
@@ -433,7 +478,8 @@ class ServingEngine:
                     self._reserved[slot] = max(0, need - covered)
                 row_logits = self._prefill_slot(slot, req.tokens)
                 lengths[slot] = self.base[slot] + len(req.tokens)
-                tok = self._sample_row(row_logits, req.temperature, rng)
+                tok = self._sample_row(row_logits, req.temperature,
+                                       _stream(req))
                 pending[slot] = tok
                 self.trace.append(("admit", req.uid, slot))
                 if sched.record_token(slot, tok):
@@ -465,6 +511,7 @@ class ServingEngine:
             # (idle rows included), so all slots are dirty from here on
             self._dirty[:] = True
             out = np.asarray(out)  # greedy: (slots,) ids; else full logits
+            self._counters["decode_time_s"] += time.perf_counter() - t_start
             if last_decode_done is not None:
                 # decode gap = non-decode time since the previous step —
                 # admissions, prefills, and (above all) compile chunks;
@@ -481,8 +528,9 @@ class ServingEngine:
             self.trace.append(("decode", len(active)))
             for slot in active:
                 lengths[slot] += 1  # the step consumed this slot's token
+                req = sched.request_in(slot)
                 tok = int(out[slot]) if greedy else self._sample_row(
-                    out[slot], sched.request_in(slot).temperature, rng)
+                    out[slot], req.temperature, _stream(req))
                 pending[slot] = tok
                 self._counters["tokens_generated"] += 1
                 if sched.record_token(slot, tok):
@@ -629,6 +677,9 @@ class ServingEngine:
                 "blocks_used": self.alloc.used_count,
                 "blocks_free": self.alloc.free_count,
             }
+        if self.mesh is not None:
+            out["mesh"] = {name: int(self.mesh.shape[name])
+                           for name in self.mesh.axis_names}
         return out
 
     def _prefill_slot(self, slot: int, tokens: np.ndarray,
@@ -776,14 +827,19 @@ class ServingEngine:
         array or a list of ragged 1-D token arrays (one per slot).  Returns
         a (slots, n) array; with a stop token, slots now terminate
         *independently* and shorter rows are right-padded with the stop
-        token."""
+        token.  ``max_new=0`` (or every slot producing nothing) returns a
+        well-shaped ``(slots, 0)`` array instead of crashing in the pad."""
         rows: List[np.ndarray] = [np.asarray(p, np.int32) for p in prompts]
         assert len(rows) == self.slots, (len(rows), self.slots)
+        if max_new == 0:  # Request requires max_new >= 1 — nothing to do
+            return np.zeros((self.slots, 0), np.int32)
         reqs = [Request(tokens=r, max_new=max_new, stop_token=stop_token,
                         temperature=temperature) for r in rows]
         results = self.serve(reqs, seed=seed)
         outs = [results[r.uid] for r in reqs]
-        n = max(len(o) for o in outs)
+        n = max((len(o) for o in outs), default=0)
+        if n == 0:
+            return np.zeros((self.slots, 0), np.int32)
         fill = stop_token if stop_token is not None else 0
         return np.stack([np.pad(o, (0, n - len(o)), constant_values=fill)
                          for o in outs])

@@ -8,6 +8,14 @@ from repro.sharding.rules import (
     replicated,
     opt_state_shardings,
 )
+from repro.sharding.serving import (
+    cache_shardings,
+    constrain_cache,
+    constrain_heads,
+    model_axis_size,
+    shard_cache,
+    shard_map_heads,
+)
 
 __all__ = [
     "Rules",
@@ -18,4 +26,10 @@ __all__ = [
     "batch_sharding",
     "replicated",
     "opt_state_shardings",
+    "cache_shardings",
+    "constrain_cache",
+    "constrain_heads",
+    "model_axis_size",
+    "shard_cache",
+    "shard_map_heads",
 ]

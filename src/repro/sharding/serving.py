@@ -1,0 +1,175 @@
+"""Mesh placement for the serving stack (engine caches, prefixes, kernels).
+
+Training shards *parameters* from their recorded logical axes
+(:mod:`repro.sharding.rules`); serving additionally has to place the
+engine-owned state — dense per-slot KV stripes, paged block pools, block
+tables, materialized compressed prefixes — none of which carries logical
+axes.  This module derives those placements from the one invariant the
+whole serving design preserves: **attention splits by head**.
+
+* ``k``/``v`` (dense ``(slots, L, Hkv, hd)``, paged ``(N, bs, Hkv, hd)``,
+  cross ``ck``/``cv``) shard the head axis on the mesh "model" axis and
+  replicate everything else — slots, positions and block structure are
+  identical on every shard, so the host-side block tables and per-slot
+  length vectors stay plain replicated numpy and the control plane never
+  becomes mesh-aware.
+* MLA ``ckv``/``kr`` latents have *no* head axis (that is the point of
+  the absorbed decode) and stay replicated — at kv_lora_rank floats per
+  token they are the cheap leaf.
+* mamba ``conv``/``ssm`` recurrent state shards its channel/head dims
+  like the corresponding weights (``mamba_inner`` / ``mamba_heads``).
+
+Non-divisible dims drop to replication via :func:`repro.sharding.rules
+.spec_for`, so a 3-head smoke config on a 2-way model mesh still runs —
+it just replicates that leaf.
+
+See docs/ARCHITECTURE.md §"Sharded serving".
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import BASELINE_RULES, Rules, spec_for
+
+__all__ = [
+    "BASELINE_RULES", "cache_shardings", "constrain_cache",
+    "constrain_heads", "leaf_spec", "model_axis_size", "shard_cache",
+    "shard_map_heads",
+]
+
+#: trailing logical dims per cache/prefix leaf key; leading dims (layer
+#: stack, batch/pool, positions) are always replicated.  The same table
+#: covers every layout the key appears in — dense cache, paged pool,
+#: stacked period section, materialized prefix, batch-free store row —
+#: because the head/channel axes are always the *trailing* ones.
+_TRAILING = {
+    "k": ("kv_heads", None),
+    "v": ("kv_heads", None),
+    "ck": ("heads", None),
+    "cv": ("heads", None),
+    "ckv": (),
+    "kr": (),
+    "h": (),            # compressor output O^i: (B, m, d_model), replicated
+    "conv": ("mamba_inner",),
+    "ssm": ("mamba_heads", None, None),
+}
+
+
+def model_axis_size(mesh: Optional[Mesh]) -> int:
+    """Extent of the tensor-parallel axis (1 when no mesh / no axis)."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("model", 1))
+
+
+def _leaf_key(path) -> Optional[str]:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return None
+
+
+def leaf_spec(key: Optional[str], ndim: int, shape: Tuple[int, ...],
+              mesh: Mesh, rules: Rules) -> P:
+    trailing = _TRAILING.get(key, ())
+    if ndim < len(trailing):
+        return P()
+    logical = (None,) * (ndim - len(trailing)) + trailing
+    return spec_for(shape, logical, mesh, rules)
+
+
+def cache_shardings(tree, mesh: Mesh, rules: Rules = BASELINE_RULES):
+    """NamedSharding pytree for any Layerwise cache / prefix / store-row
+    tree, keyed by leaf name (``k``/``v``/``ckv``/…).  Works for dense and
+    paged layouts alike — the head axis is trailing in both."""
+
+    def one(path, x):
+        return NamedSharding(
+            mesh, leaf_spec(_leaf_key(path), x.ndim, x.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def shard_cache(tree, mesh: Optional[Mesh], rules: Rules = BASELINE_RULES):
+    """Place a cache/prefix tree on the mesh (no-op without a mesh)."""
+    if mesh is None:
+        return tree
+    return jax.device_put(tree, cache_shardings(tree, mesh, rules))
+
+
+def constrain_cache(tree, mesh: Optional[Mesh],
+                    rules: Rules = BASELINE_RULES):
+    """``with_sharding_constraint`` a cache/prefix tree inside jit — pins
+    freshly materialized prefixes to the pool layout so the compile →
+    store.put handoff never round-trips through a replicated gather."""
+    if mesh is None or model_axis_size(mesh) <= 1:
+        return tree
+
+    def one(path, x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, leaf_spec(_leaf_key(path), x.ndim,
+                                             x.shape, mesh, rules)))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def constrain_heads(x, mesh: Optional[Mesh], axis: int = 2):
+    """Pin a (..., heads, hd) attention operand's head axis to the model
+    mesh axis (replicating the rest) so GSPMD keeps decode head-parallel
+    instead of gathering the cache.  No-op when no mesh / heads don't
+    divide."""
+    n = model_axis_size(mesh)
+    if n <= 1 or x.ndim <= axis or x.shape[axis] % n:
+        return x
+    entries = [None] * x.ndim
+    entries[axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map across jax versions (experimental → jax.shard_map)."""
+    try:
+        from jax.experimental.shard_map import shard_map
+
+        # pallas_call has no replication rule — checking is pointless here
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except ImportError:
+        try:  # newer jax renamed the replication-check opt-out
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+
+
+def shard_map_heads(f, mesh: Mesh, head_args, replicated_args: int,
+                    head_axis: int = 2):
+    """Wrap a head-parallel kernel in shard_map: the first ``head_args``
+    operands split their ``head_axis`` over "model" (batch, positions and
+    block structure replicated), the remaining ``replicated_args``
+    operands (lengths, block tables) are replicated on every shard, and
+    the output is head-split like the inputs.
+
+    This is what makes the *pallas* decode kernels mesh-runnable: unlike
+    jnp ops they have no GSPMD partitioning rule, so each shard must run
+    the kernel on its own head slice explicitly.
+    """
+    def head_spec(ndim):
+        entries = [None] * ndim
+        entries[head_axis] = "model"
+        return P(*entries)
+
+    def wrapped(*args):
+        assert len(args) == head_args + replicated_args
+        in_specs = tuple(head_spec(a.ndim) for a in args[:head_args]) + \
+            tuple(P(*([None] * a.ndim)) for a in args[head_args:])
+        out_specs = head_spec(4)  # attention output: (B, S, Hq, Dv)
+        return _shard_map(f, mesh, in_specs, out_specs)(*args)
+
+    return wrapped

@@ -355,3 +355,128 @@ def test_prefix_store_lru_eviction_and_seated_guard(setup, rng):
     assert not eng.store.seated("t0")
     eng.add_prefix("t3", mats[1])
     assert "t0" not in eng.store
+
+
+# ---------------------------------------------------------------------------
+# Exact block_size boundaries (seat / prefill / decode accounting audit)
+# ---------------------------------------------------------------------------
+
+
+def _block_leaves(eng, blocks):
+    """Bit-exact content of the given pool blocks across every KV leaf."""
+    out = []
+    for entry in eng.cache.get("prefix", []):
+        for key in ("k", "v", "ckv", "kr"):
+            if key in entry:
+                out.append(np.asarray(entry[key][np.asarray(blocks)]))
+    for entry in eng.cache.get("period", {}).values():
+        for key in ("k", "v", "ckv", "kr"):
+            if key in entry:
+                out.append(np.asarray(entry[key][:, np.asarray(blocks)]))
+    return out
+
+
+def test_exact_block_multiple_prefix_no_cow(setup, rng):
+    """Prefix length an exact block multiple: the tail block is *full*, so
+    seating and prefilling behind it must neither copy-on-write nor touch
+    the shared blocks — and the served tokens still match the dense
+    engine."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    bs = m // 2 if m % 2 == 0 else m  # m % bs == 0 either way
+    assert m % bs == 0
+    mat = _materialize(setup, rng)
+    prompts = [rng.integers(4, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 3)]
+
+    dense = ServingEngine(cfg, params, slots=2, max_len=m + 24)
+    dense.add_prefix("task", mat)
+    reqs = [Request(tokens=p, max_new=4, prefix="task") for p in prompts]
+    want = dense.serve(reqs)
+
+    eng = ServingEngine(cfg, params, slots=2, max_len=m + 24,
+                        kv_layout="paged", block_size=bs)
+    eng.add_prefix("task", mat)
+    shared = eng.store.blocks("task")
+    assert len(shared) == m // bs  # exactly full blocks, no partial tail
+    before = _block_leaves(eng, shared)
+    reqs2 = [Request(tokens=p, max_new=4, prefix="task") for p in prompts]
+    got = eng.serve(reqs2)
+    for r, r2 in zip(reqs, reqs2):
+        np.testing.assert_array_equal(want[r.uid], got[r2.uid])
+    # both slots still point at the shared blocks for the prefix region —
+    # no COW fired (a full tail block is never written into)
+    for slot in range(2):
+        assert eng._slot_blocks[slot][:len(shared)] == shared
+    after = _block_leaves(eng, shared)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    # the +1 tail-COW reserve only applies to partial tails
+    probe = Request(tokens=prompts[0], max_new=4, prefix="task")
+    need = eng._blocks_needed(probe, m)
+    n = len(probe.tokens)
+    cap = eng.max_len - m
+    from repro.serving.compiler import pow2_bucket
+    width = max(1, min(pow2_bucket(n, 8), cap))
+    expect = (eng.alloc.blocks_for(m + max(width, n + probe.max_new))
+              - eng.alloc.blocks_for(m))
+    assert need == expect  # no spurious +1 at the exact boundary
+
+
+def test_decode_across_block_boundary_exact_base(setup, rng):
+    """Recurrent-free exact-width prefill (prompt + decode budget chosen so
+    decode writes cross into a fresh block exactly at a boundary): the
+    decode-time allocation draws down the admission reservation and the
+    tokens match dense."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    bs = 4
+    mat = _materialize(setup, rng)
+    # width buckets to 8; n + max_new = 12 > 8 forces decode allocations,
+    # and m + 8 .. m + 12 crosses a block boundary when m % 4 == 0
+    prompt = rng.integers(4, cfg.vocab_size, 7).astype(np.int32)
+    dense = ServingEngine(cfg, params, slots=1, max_len=m + 24)
+    dense.add_prefix("task", mat)
+    want = next(iter(dense.serve(
+        [Request(tokens=prompt, max_new=5, prefix="task")]).values()))
+
+    eng = ServingEngine(cfg, params, slots=1, max_len=m + 24,
+                        kv_layout="paged", block_size=bs)
+    eng.add_prefix("task", mat)
+    got = next(iter(eng.serve(
+        [Request(tokens=prompt, max_new=5, prefix="task")]).values()))
+    np.testing.assert_array_equal(want, got)
+    assert int(eng._reserved[0]) == 0  # finished slot returned its reserve
+
+
+def test_admission_need_is_exact_at_block_boundary(setup, rng):
+    """Pool sized to the *exact* worst-case need admits and serves; one
+    block fewer fails fast with OutOfBlocksError — i.e. the admission
+    accounting neither under- nor over-reserves at an exact-multiple
+    base."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    bs = m if m > 0 else 4  # prefix occupies exactly one full block
+    mat = _materialize(setup, rng)
+    prompt = rng.integers(4, cfg.vocab_size, 3).astype(np.int32)
+
+    probe = ServingEngine(cfg, params, slots=1, max_len=m + 16,
+                          kv_layout="paged", block_size=bs)
+    probe.add_prefix("task", mat)
+    req = Request(tokens=prompt, max_new=2, prefix="task")
+    need = probe._blocks_needed(req, m)
+    store_blocks = len(probe.store.blocks("task"))
+
+    exact = 1 + store_blocks + need  # trash + resident prefix + window
+    eng = ServingEngine(cfg, params, slots=1, max_len=m + 16,
+                        kv_layout="paged", block_size=bs, num_blocks=exact)
+    eng.add_prefix("task", mat)
+    out = eng.serve([Request(tokens=prompt, max_new=2, prefix="task")])
+    assert len(next(iter(out.values()))) == 2
+
+    tight = ServingEngine(cfg, params, slots=1, max_len=m + 16,
+                          kv_layout="paged", block_size=bs,
+                          num_blocks=exact - 1)
+    tight.add_prefix("task", mat)
+    with pytest.raises(OutOfBlocksError):
+        tight.serve([Request(tokens=prompt, max_new=2, prefix="task")])
