@@ -1,4 +1,6 @@
-from repro.checkpoint.store import save_tree, load_tree
+from repro.checkpoint.store import (compress_bytes, decompress_bytes,
+                                    default_codec, load_tree, save_tree)
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["save_tree", "load_tree", "CheckpointManager"]
+__all__ = ["save_tree", "load_tree", "CheckpointManager",
+           "compress_bytes", "decompress_bytes", "default_codec"]

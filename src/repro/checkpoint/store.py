@@ -24,7 +24,7 @@ from __future__ import annotations
 import os
 import shutil
 import zlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import msgpack
@@ -53,24 +53,36 @@ def _shard_ext(codec: str) -> str:
     return _SHARD_EXT[codec]
 
 
-def _compress(codec: str, data: bytes, level: int) -> bytes:
+def compress_bytes(data: bytes, codec: Optional[str] = None,
+                   level: int = 3) -> Tuple[str, bytes]:
+    """Compress a byte string, returning ``(codec, payload)``.
+
+    The returned codec tag is what the caller must record next to the
+    payload (checkpoint manifests put it in their header, the serving
+    disk tier in each prefix shard's header) and hand back to
+    :func:`decompress_bytes` — payloads themselves are untagged streams,
+    so any build can read any artifact whose codec it has available
+    (``raw`` always works).  ``codec=None`` picks :func:`default_codec`.
+    """
+    codec = codec or default_codec()
     if codec == "zstd":
         if zstandard is None:
             raise ImportError("codec 'zstd' requires the zstandard package "
                               "(pip install zstandard)")
-        return zstandard.ZstdCompressor(level=level).compress(data)
+        return codec, zstandard.ZstdCompressor(level=level).compress(data)
     if codec == "zlib":
-        return zlib.compress(data, level)
+        return codec, zlib.compress(data, level)
     if codec == "raw":
-        return data
+        return codec, data
     raise ValueError(f"unknown checkpoint codec {codec!r}; "
                      f"choose from {sorted(_SHARD_EXT)}")
 
 
-def _decompress(codec: str, data: bytes) -> bytes:
+def decompress_bytes(data: bytes, codec: str) -> bytes:
+    """Invert :func:`compress_bytes` given the recorded codec tag."""
     if codec == "zstd":
         if zstandard is None:
-            raise ImportError("checkpoint was written with codec 'zstd' but "
+            raise ImportError("artifact was written with codec 'zstd' but "
                               "zstandard is not installed (pip install "
                               "zstandard, or re-save with codec='zlib')")
         return zstandard.ZstdDecompressor().decompress(data)
@@ -105,7 +117,7 @@ def save_tree(path: str, tree: Any, meta: Optional[Dict] = None,
             return
         data = b"".join(shard_buf)
         with open(os.path.join(tmp, f"shard_{shard_id:05d}{ext}"), "wb") as f:
-            f.write(_compress(codec, data, level))
+            f.write(compress_bytes(data, codec, level)[1])
         shard_id += 1
         shard_buf, shard_size = [], 0
 
@@ -151,7 +163,7 @@ def load_tree(path: str, template: Any = None):
         sid = e["shard"]
         if sid not in shards:
             with open(os.path.join(path, f"shard_{sid:05d}{ext}"), "rb") as f:
-                shards[sid] = _decompress(codec, f.read())
+                shards[sid] = decompress_bytes(f.read(), codec)
         raw = shards[sid][e["offset"] : e["offset"] + e["nbytes"]]
         arr = np.frombuffer(raw, dtype=np.dtype(e["dtype"])).reshape(e["shape"])
         arrays[e["name"]] = arr

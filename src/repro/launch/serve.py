@@ -23,6 +23,17 @@ already-seated slots keep emitting tokens while a cold task compiles
 (single-flight: concurrent requests for one task share one compile).
 ``--stats`` prints the engine's cache/compile counters either way.
 
+``--host-capacity``/``--disk-dir`` put a memory hierarchy behind the
+HBM prefix store (``--prefix-capacity`` bounds HBM residency): evicted
+compressed prefixes demote to pinned host RAM, spill to
+codec-compressed disk shards under host pressure, and promote back
+host→HBM in ``--promote-budget``-chunk steps interleaved with decode
+when a request names them again.  Combined with ``--raw-shots``
+(content-addressed prefix names) a restart pointing ``--disk-dir`` at a
+previous run's directory promotes the spilled shards instead of
+recompiling those tasks; in offline-compress mode stage 1 always
+re-registers fresh prefixes, superseding any old shards.
+
 ``--kv-layout paged`` swaps the per-slot dense cache for the block-pool
 paged cache: every slot seated on the same task points its block table
 at one shared physical copy of the compressed prefix (copy-on-write on
@@ -133,6 +144,23 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical blocks in the paged pool (default: "
                          "slots+4 worst-case windows)")
+    ap.add_argument("--prefix-capacity", type=int, default=None,
+                    help="max HBM-resident compressed prefixes (LRU past "
+                         "it; default unbounded)")
+    ap.add_argument("--host-capacity", type=int, default=None,
+                    help="enable the tiered prefix cache: HBM evictions "
+                         "demote to a pinned-host tier holding up to N "
+                         "prefixes (0 = demote straight to disk)")
+    ap.add_argument("--disk-dir", default=None,
+                    help="disk tier directory: host pressure spills "
+                         "codec-compressed prefix shards here, and shards "
+                         "from a previous run are promoted instead of "
+                         "recompiled")
+    ap.add_argument("--promote-budget", type=int, default=None,
+                    help="max per-layer host->HBM chunks copied per "
+                         "serve-loop iteration during a promotion "
+                         "(default: whole prefix at once — decode stalls "
+                         "for the full copy)")
     ap.add_argument("--raw-shots", action="store_true",
                     help="skip the offline compress stage: requests carry "
                          "their raw many-shot context and the engine "
@@ -160,6 +188,10 @@ def main():
         ap.error("--block-size must be >= 1")
     if args.compile_budget is not None and args.compile_budget < 1:
         ap.error("--compile-budget must be >= 1")
+    if args.promote_budget is not None and args.promote_budget < 1:
+        ap.error("--promote-budget must be >= 1")
+    if args.host_capacity is not None and args.host_capacity < 0:
+        ap.error("--host-capacity must be >= 0")
     if args.raw_shots and args.classify:
         ap.error("--raw-shots serves generation traffic (classify goes "
                  "through the offline seat path)")
@@ -197,8 +229,19 @@ def main():
                            kv_layout=args.kv_layout,
                            compressor=compressor if args.raw_shots else None,
                            compile_token_budget=args.compile_budget,
+                           prefix_capacity=args.prefix_capacity,
+                           host_capacity=args.host_capacity,
+                           disk_dir=args.disk_dir,
+                           promote_layer_budget=args.promote_budget,
                            mesh=mesh, rules=rules,
                            **paged_kw)
+    if engine.tiers is not None:
+        preloaded = engine.tiers.disk_names()
+        print(f"[edge] tiered prefix cache: host capacity "
+              f"{'unbounded' if args.host_capacity is None else args.host_capacity}"
+              f", disk {args.disk_dir or '(none)'}"
+              + (f", {len(preloaded)} shard(s) indexed from a previous run"
+                 if preloaded else ""))
 
     tasks, payload = [], 0
     t0 = time.perf_counter()
@@ -228,6 +271,10 @@ def main():
                "compress_s": t_compress, "payload_bytes": payload,
                "kv_layout": args.kv_layout, "raw_shots": args.raw_shots,
                "compile_budget": args.compile_budget,
+               "prefix_capacity": args.prefix_capacity,
+               "host_capacity": args.host_capacity,
+               "disk_dir": args.disk_dir,
+               "promote_budget": args.promote_budget,
                "mesh": args.mesh, "rules": args.rules if args.mesh else None}
     if args.kv_layout == "paged":
         print(f"[edge] paged pool: {engine.alloc.num_blocks} blocks x "

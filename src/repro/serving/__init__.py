@@ -13,6 +13,13 @@ Cold tasks need no offline step: a :class:`Request` carrying
 token-budget chunks interleaved with decode steps, single-flight per
 task — then materializes and seats the prefix and wakes the request.
 
+Evicted prefixes need no recompile either: with
+``ServingEngine(host_capacity=…, disk_dir=…)`` the HBM store is fronted
+by a :class:`TieredPrefixStore` — evictions demote the compressed rows
+to pinned host RAM and spill to codec-compressed disk shards, and a
+request naming a cold prefix parks while the row promotes back
+host→HBM in per-layer chunks interleaved with decode.
+
 Everything imported here is CPU-safe: the pallas paged-attention kernel
 is reached only through :func:`repro.kernels.ops.paged_decode_attention`'s
 lazy dispatch (mirroring ``ops._resolve``), so ``from repro.serving
@@ -33,11 +40,13 @@ from repro.serving.prefix_store import (
     write_prefix_to_cache,
 )
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.tiers import PromotionJob, TieredPrefixStore
 
 __all__ = [
     "ServingEngine", "Request", "Scheduler",
     "PrefixCompiler", "CompileJob",
     "PrefixStore", "PagedPrefixStore", "PrefixSeatedError",
+    "TieredPrefixStore", "PromotionJob",
     "BlockAllocator", "BlockAllocationError", "OutOfBlocksError",
     "materialize_prefix", "write_prefix_to_cache",
 ]

@@ -12,6 +12,12 @@ Invariants (property-tested in ``tests/test_paged_properties.py``):
 * ``decref`` below zero (double-free) raises instead of corrupting the
   free list.
 
+A block's contents are only trustworthy while it is referenced: the
+tiered store's demotion path therefore gathers an evicted prefix's KV
+out of the pool *before* its ``decref``\\ s run (``serving/tiers.py``),
+never after — a freed block may be re-allocated and re-written by the
+very next prefill.
+
 Block 0 is the **trash block**: it is never allocated, and every unused
 block-table entry points at it.  The batched decode step writes each
 slot's incoming token at ``lengths[slot]`` for *every* slot — idle and

@@ -21,6 +21,12 @@ the same task (or carry byte-identical shot sets, which hash to the same
 auto-generated name) share one compilation, however many arrive while it
 is in flight.
 
+Compilation is the path of last resort: with a tiered prefix store
+(``serving/tiers.py``) an *evicted* prefix is demoted down the memory
+hierarchy rather than destroyed, and the engine routes a cold request
+to the (much cheaper) promotion path first — the compiler only sees
+tasks no tier has ever held.
+
 The compiler is pure control plane + functional jax calls: it owns no
 engine state.  The engine drives it (``step``), installs finished
 prefixes into its store (handling paged LRU/`PrefixSeatedError`

@@ -33,6 +33,14 @@ Two KV layouts (``kv_layout=``):
   copy-on-write only for a partially-filled tail block, private blocks
   freed on refill, and admission gated on free blocks.
 
+With ``host_capacity=``/``disk_dir=`` set, the HBM store is fronted by
+a :class:`~repro.serving.tiers.TieredPrefixStore`: evictions demote the
+compressed prefix to pinned host RAM (and under host pressure to disk)
+instead of destroying it, and a request naming a cold prefix parks
+``waiting_on_prefix`` while the row is promoted back host→HBM in
+``promote_layer_budget``-chunk steps interleaved with decode — the same
+stay-responsive contract as online compilation.
+
 See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 """
 
@@ -68,10 +76,12 @@ from repro.serving.prefix_store import (  # re-exported for compatibility
     write_prefix_to_cache,
 )
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.tiers import TieredPrefixStore
 
 __all__ = [
     "ServingEngine", "PrefixStore", "PagedPrefixStore", "PrefixCompiler",
-    "Request", "Scheduler", "materialize_prefix", "write_prefix_to_cache",
+    "Request", "Scheduler", "TieredPrefixStore", "materialize_prefix",
+    "write_prefix_to_cache",
 ]
 
 
@@ -130,12 +140,17 @@ class ServingEngine:
                  prefix_capacity: Optional[int] = None,
                  compressor=None,
                  compile_token_budget: Optional[int] = None,
+                 host_capacity: Optional[int] = None,
+                 disk_dir: Optional[str] = None,
+                 promote_layer_budget: Optional[int] = None,
                  mesh=None, rules=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
         if compile_token_budget is not None and compile_token_budget < 1:
             raise ValueError("compile_token_budget must be >= 1 (or None)")
+        if promote_layer_budget is not None and promote_layer_budget < 1:
+            raise ValueError("promote_layer_budget must be >= 1 (or None)")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -171,6 +186,7 @@ class ServingEngine:
         self._counters = {
             "decode_steps": 0, "prefills": 0, "tokens_generated": 0,
             "decode_steps_during_compile": 0, "compile_chunks_interleaved": 0,
+            "decode_steps_during_promote": 0, "promote_steps_interleaved": 0,
             "decode_gap_max_s": 0.0, "decode_gap_sum_s": 0.0,
             "decode_gaps": 0, "decode_time_s": 0.0,
         }
@@ -210,7 +226,17 @@ class ServingEngine:
         else:
             self.cache = tfm.init_cache(cfg, slots, max_len)
             self.store = (prefix_store if prefix_store is not None
-                          else PrefixStore(cfg))
+                          else PrefixStore(cfg, capacity=prefix_capacity))
+        # tiered prefix cache: with a host and/or disk tier configured,
+        # the HBM store is fronted by a TieredPrefixStore — evictions
+        # demote down the hierarchy instead of dropping, and cold
+        # prefixes promote back asynchronously (budgeted per decode step)
+        self.promote_layer_budget = promote_layer_budget
+        self.tiers: Optional[TieredPrefixStore] = None
+        if host_capacity is not None or disk_dir is not None:
+            self.store = self.tiers = TieredPrefixStore(
+                self.store, host_capacity=host_capacity, disk_dir=disk_dir,
+                mesh=mesh, rules=self.rules, cache_ref=lambda: self.cache)
         # KV stripes/pools split by head on the "model" axis, recurrent
         # state by channel/head; everything non-divisible replicates
         self.cache = shard_cache(self.cache, mesh, self.rules)
@@ -395,6 +421,12 @@ class ServingEngine:
         runs one batched decode step for the seated slots, then at most
         ``compile_token_budget`` source tokens of compilation — already-
         seated slots keep emitting tokens throughout a compile.
+
+        With a tiered store, a request naming a demoted/spilled prefix
+        parks the same way while the row is promoted back host→HBM, at
+        most ``promote_layer_budget`` per-layer chunks per iteration —
+        promotion beats recompiling even when the request carries
+        ``raw_shots``.
         """
         sched = Scheduler(self.slots)
         self.trace = []
@@ -438,6 +470,8 @@ class ServingEngine:
         while sched.has_work():
             if self.compiler is not None:
                 self._drain_compiler(sched)
+            if self.tiers is not None:
+                self._drain_promoter(sched)
             admitted = sched.admit(can_seat)
             if paged and not admitted and not sched.active_slots() \
                     and sched.pending:
@@ -487,8 +521,16 @@ class ServingEngine:
             active = sched.active_slots()
             compiling = (self.compiler is not None
                          and self.compiler.has_compile_work())
+            promoting = (self.tiers is not None
+                         and self.tiers.has_promote_work())
             if not active:
-                if compiling:
+                if promoting:
+                    # nothing decoding: chunking the host→HBM copy stalls
+                    # nobody — run the head promotion to completion (it
+                    # is the cheaper path to an admissible request, so it
+                    # goes before compile work)
+                    self._promote_step(None)
+                elif compiling:
                     # nothing decoding: an iteration's worth of compile
                     # work stalls nobody — run the head job to completion
                     # so cold-task time-to-first-token is as low as it gets
@@ -525,6 +567,8 @@ class ServingEngine:
             self._counters["decode_steps"] += 1
             if compiling:
                 self._counters["decode_steps_during_compile"] += 1
+            if promoting:
+                self._counters["decode_steps_during_promote"] += 1
             self.trace.append(("decode", len(active)))
             for slot in active:
                 lengths[slot] += 1  # the step consumed this slot's token
@@ -540,6 +584,11 @@ class ServingEngine:
                 # compilation behind this decode step, then decode again
                 self._compile_step(self.compile_token_budget)
                 self._counters["compile_chunks_interleaved"] += 1
+            if promoting:
+                # interleave: at most promote_layer_budget per-layer host→
+                # HBM chunks behind this decode step, then decode again
+                self._promote_step(self.promote_layer_budget)
+                self._counters["promote_steps_interleaved"] += 1
         return results
 
     # ------------------------------------------------------------------
@@ -550,16 +599,21 @@ class ServingEngine:
         """Side-effect-free validation of one request (no counters, no
         compile submission): raises the same errors `_submit` would."""
         if req.prefix is not None and req.prefix not in self.store:
-            if req.raw_shots is None:
+            if self.tiers is not None and self.tiers.cold_resident(req.prefix):
+                # demoted/spilled prefix: promotable, no recompile needed
+                base = self.tiers.cold_base_len(req.prefix)
+            elif req.raw_shots is None:
                 raise KeyError(
                     f"unknown prefix {req.prefix!r}; registered: "
                     f"{sorted(self.store.names()) or '(none)'}")
-            if self.compiler is None:
+            elif self.compiler is None:
                 raise ValueError(
                     f"request {req.uid} carries raw_shots but the engine "
                     "has no compressor — pass ServingEngine(compressor=...)")
-            # worst-case seat: m memory slots (0 for state-only tasks)
-            base = self.cfg.memcom.num_memory_tokens if self.cfg.memcom else 0
+            else:
+                # worst-case seat: m memory slots (0 for state-only tasks)
+                base = (self.cfg.memcom.num_memory_tokens
+                        if self.cfg.memcom else 0)
         elif req.prefix is not None:
             base = self.store.base_len(req.prefix)
         else:
@@ -570,14 +624,21 @@ class ServingEngine:
 
     def _submit(self, sched: Scheduler, req: Request) -> None:
         """Route one (already validated) request into the scheduler:
-        resident prefix (or no prefix) goes straight to the FIFO queue; a
-        raw_shots request whose prefix is not resident is parked
-        ``waiting_on_prefix`` and its compilation is submitted
-        (single-flight — N requests for one task trigger one compile)."""
+        resident prefix (or no prefix) goes straight to the FIFO queue.
+        A request whose prefix is not HBM-resident is parked
+        ``waiting_on_prefix`` while the prefix is *promoted* from a cold
+        tier (if the tiered store holds it — even when the request also
+        carries raw_shots, promotion beats recompiling) or, failing
+        that, compiled from its raw_shots.  Both paths are single-flight
+        — N requests for one task trigger one promotion/compile."""
         if req.prefix is not None:
             hit = self.store.lookup(req.prefix)
             if not hit:
-                self.compiler.submit(req.prefix, req.raw_shots)
+                if self.tiers is not None and \
+                        self.tiers.cold_resident(req.prefix):
+                    self.tiers.submit_promotion(req.prefix)
+                else:
+                    self.compiler.submit(req.prefix, req.raw_shots)
                 sched.park(req)
                 self.trace.append(("park", req.uid, req.prefix))
                 return
@@ -597,6 +658,40 @@ class ServingEngine:
         if consumed:
             self.trace.append(("compile", consumed))
 
+    # ------------------------------------------------------------------
+    # Async tier promotion (TieredPrefixStore integration)
+    # ------------------------------------------------------------------
+
+    def _promote_step(self, chunk_budget: Optional[int]) -> None:
+        before = self.tiers.tier_stats["promote_chunks"]
+        self.tiers.promote_step(chunk_budget)
+        copied = self.tiers.tier_stats["promote_chunks"] - before
+        if copied:
+            self.trace.append(("promote", copied))
+
+    def _drain_promoter(self, sched: Scheduler) -> None:
+        """Install at most one finished promotion into the HBM store and
+        wake its waiting requests (same one-per-call reasoning as
+        :meth:`_drain_compiler`: the woken requests seat — and thereby
+        pin — the promoted prefix before a later install's LRU runs)."""
+        ready = self.tiers.ready_promotions()
+        if not ready:
+            return
+        name = ready[0]
+        row = self.tiers.promoted_row(name)
+        if self.kv_layout == "paged":
+            def put():
+                self.cache = self.store.put_row(name, row, self.cache)
+        else:
+            def put():
+                self.store.put_row(name, row)
+        if not self._install(put, sched):
+            return  # paged seat pressure: retry on a later iteration
+        self.tiers.mark_promoted(name)
+        self.trace.append(("promoted", name))
+        for req in sched.wake(name):
+            self.trace.append(("wake", req.uid, name))
+
     def _drain_compiler(self, sched: Scheduler) -> None:
         """Install at most one finished compilation into the store and
         wake its waiting requests.  One per call on purpose: the woken
@@ -615,34 +710,49 @@ class ServingEngine:
             self.trace.append(("wake", req.uid, name))
 
     def _try_install(self, name: str, materialized, sched: Scheduler) -> bool:
-        """Make a compiled prefix store-resident.  Dense never fails; the
-        paged store can hit LRU capacity with every resident prefix seated
-        (:class:`PrefixSeatedError`) or an exhausted pool
+        """Make a compiled prefix store-resident (see :meth:`_install`)."""
+        if self.kv_layout == "paged":
+            def put():
+                self.cache = self.store.put(name, materialized, self.cache)
+        else:
+            def put():
+                self.store.put(name, materialized)
+        return self._install(put, sched)
+
+    def _install(self, put, sched: Scheduler) -> bool:
+        """Run one store-residency ``put`` under capacity pressure.  An
+        uncapped dense store never fails; a capped store can hit LRU
+        capacity with every resident prefix seated or pinned
+        (:class:`PrefixSeatedError`), and the paged pool can be exhausted
         (:class:`OutOfBlocksError`) — then free slots' stale references
         are released and the install retried; still failing, it is
         deferred while anything is running, and raised only when nothing
         ever could free capacity."""
-        if self.kv_layout != "paged":
-            self.store.put(name, materialized)
-            return True
         # queued/waiting requests' prefixes must survive this install's LRU;
         # the pin is scoped to the put calls (eviction only happens inside
         # them) so a stale set can never block later add_prefix calls
         self.store.pinned = sched.referenced_prefixes()
         try:
             try:
-                self.cache = self.store.put(name, materialized, self.cache)
+                put()
                 return True
             except (PrefixSeatedError, OutOfBlocksError):
                 # finished-but-not-reseated slots still hold block
-                # references; releasing a *free* slot's blocks is always safe
-                self._reclaim_free_slots(sched)
-            try:
-                self.cache = self.store.put(name, materialized, self.cache)
-                return True
-            except (PrefixSeatedError, OutOfBlocksError):
-                if sched.active_slots():
-                    return False  # a running slot will free capacity; defer
+                # references; releasing a *free* slot's blocks is always
+                # safe (dense slots hold copies, nothing to reclaim)
+                if self.kv_layout == "paged":
+                    self._reclaim_free_slots(sched)
+                    try:
+                        put()
+                        return True
+                    except (PrefixSeatedError, OutOfBlocksError):
+                        pass
+                if sched.active_slots() or sched.pending:
+                    # a running slot will free capacity when it finishes —
+                    # and a *queued* request will run, finish, and unpin
+                    # its prefix (the drain precedes admission, so the
+                    # queue can be non-empty with every slot free); defer
+                    return False
                 raise
         finally:
             self.store.pinned = set()
@@ -657,6 +767,9 @@ class ServingEngine:
         if self.compiler is not None:
             for k in self.compiler.stats:
                 self.compiler.stats[k] = 0
+        if self.tiers is not None:
+            for k in self.tiers.tier_stats:
+                self.tiers.tier_stats[k] = 0
 
     def stats(self) -> Dict[str, Optional[dict]]:
         """Cache/compile behaviour counters: engine loop counts, the
@@ -670,6 +783,8 @@ class ServingEngine:
             "compiler": (dict(self.compiler.stats)
                          if self.compiler is not None else None),
         }
+        if self.tiers is not None:
+            out["prefix_tiers"] = self.tiers.tier_snapshot()
         if self.kv_layout == "paged":
             out["pool"] = {
                 "num_blocks": self.alloc.num_blocks,

@@ -188,20 +188,55 @@ class PrefixStore:
     :meth:`put` extracts one batch row from a :func:`materialize_prefix`
     output, and engines seat entries into individual slots via
     :func:`seat_prefix_row`.
+
+    ``capacity`` (optional) bounds resident prefixes LRU-style, like the
+    paged store: inserting past capacity evicts the least-recently-used
+    entry not in :attr:`pinned`.  Dense seating *copies* a prefix into
+    the slot's cache stripe, so — unlike the paged store — evicting a
+    seated entry is safe and never raises.
+
+    ``demote_hook`` (set by :class:`~repro.serving.tiers
+    .TieredPrefixStore`) receives ``(name, row)`` just before an entry is
+    dropped, so evictions demote the prefix down the memory hierarchy
+    instead of destroying it.
     """
 
-    def __init__(self, cfg: ModelConfig):
+    def __init__(self, cfg: ModelConfig, capacity: Optional[int] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (or None)")
         self.cfg = cfg
-        self._entries: Dict[str, dict] = {}
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, dict]" = OrderedDict()
         self._base_len: Dict[str, int] = {}
         self.stats = _new_store_stats()
+        self.pinned: set = set()  # names the LRU must skip (engine-kept)
+        self.demote_hook = None   # called (name, row) before an evict drops
 
     def put(self, name: str, materialized, batch_index: int = 0) -> str:
-        row = take_prefix_row(materialized, batch_index)
+        return self.put_row(name, take_prefix_row(materialized, batch_index))
+
+    def put_row(self, name: str, row) -> str:
+        """Make an already batch-free per-layer row resident (the tiered
+        promotion path lands here — no materialized batch to slice)."""
+        if name not in self._entries:
+            while self.capacity is not None and \
+                    len(self._entries) >= self.capacity:
+                self._evict_lru()
         self._entries[name] = row
+        self._entries.move_to_end(name)
         self._base_len[name] = _row_base_len(row)
         self.stats["puts"] += 1
         return name
+
+    def _evict_lru(self) -> None:
+        for name in self._entries:  # oldest first
+            if name not in self.pinned:
+                self.evict(name)
+                return
+        raise PrefixSeatedError(
+            f"PrefixStore at capacity ({self.capacity}) and every resident "
+            "prefix is pinned by a queued or waiting request — grow the "
+            "capacity or finish requests")
 
     def lookup(self, name: str) -> bool:
         """Counted residency check — the serve-path ``hit``/``miss``
@@ -210,14 +245,21 @@ class PrefixStore:
         self.stats["hits" if hit else "misses"] += 1
         return hit
 
-    def evict(self, name: str) -> None:
+    def evict(self, name: str, demote: bool = True) -> None:
+        """``demote=False`` skips the hook — for replace-path evictions,
+        where fresh content supersedes the old copy and demoting it would
+        only waste a device→host copy (and possibly spill an innocent
+        LRU host row)."""
         self._check(name)
+        if demote and self.demote_hook is not None:
+            self.demote_hook(name, self._entries[name])
         del self._entries[name]
         del self._base_len[name]
         self.stats["evictions"] += 1
 
     def get(self, name: str) -> dict:
         self._check(name)
+        self._entries.move_to_end(name)  # LRU recency
         return self._entries[name]
 
     def base_len(self, name: str) -> int:
@@ -341,6 +383,10 @@ class PagedPrefixStore:
         # requests (a parked request's freshly compiled prefix must survive
         # until that request seats it)
         self.pinned: set = set()
+        # tiered serving: called (name, entry) after the seated guard but
+        # before the blocks are released, so an evicted prefix's KV can be
+        # read back out of the pool and demoted to host instead of dropped
+        self.demote_hook = None
 
     def lookup(self, name: str) -> bool:
         """Counted residency check (see :meth:`PrefixStore.lookup`)."""
@@ -353,11 +399,19 @@ class PagedPrefixStore:
         ``name``.  Returns the updated Layerwise cache (pools are
         functional jax arrays).  Re-putting an existing name replaces it —
         which requires the old entry to be unseated."""
+        return self.put_row(name, take_prefix_row(materialized, batch_index),
+                            cache)
+
+    def put_row(self, name: str, row, cache):
+        """:meth:`put` for an already batch-free row (the tiered
+        promotion path: host leaves land on device pre-sharded, then
+        scatter straight into pool blocks here)."""
         if name in self._entries:
-            self.evict(name)  # raises PrefixSeatedError if still seated
+            # replace: raises PrefixSeatedError if still seated; the old
+            # copy is superseded, not demoted
+            self.evict(name, demote=False)
         while self.capacity is not None and len(self._entries) >= self.capacity:
             self._evict_lru()
-        row = take_prefix_row(materialized, batch_index)
         base_len = _row_base_len(row)
         blocks = self.alloc.alloc(self.alloc.blocks_for(base_len))
         if blocks:
@@ -388,15 +442,20 @@ class PagedPrefixStore:
         blocks (the store's own reference is not counted)."""
         return self._seated(self._get(name, touch=False))
 
-    def evict(self, name: str) -> None:
+    def evict(self, name: str, demote: bool = True) -> None:
         """Release a prefix's blocks back to the pool.  Raises
         :class:`PrefixSeatedError` while any slot is still seated on it —
         freeing blocks under a live block table would let the allocator
-        hand them to another slot mid-decode."""
+        hand them to another slot mid-decode.  ``demote=False`` skips the
+        hook (replace-path evictions supersede the old copy)."""
         entry = self._get(name, touch=False)
         if self._seated(entry):
             raise PrefixSeatedError(
                 f"prefix {name!r} is seated in at least one slot")
+        if demote and self.demote_hook is not None:
+            # the hook gathers the KV out of the pool while the blocks
+            # are still referenced (and therefore still hold this prefix)
+            self.demote_hook(name, entry)
         for b in entry["blocks"]:
             self.alloc.decref(b)
         del self._entries[name]

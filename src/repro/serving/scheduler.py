@@ -12,11 +12,15 @@ Finished slots return to the free pool immediately, so the next queued
 request is admitted mid-decode — no drain barrier, no recompilation (the
 decode step's shapes never change; only the per-slot length vector does).
 
-Requests whose compressed prefix does not exist yet (they carry
-``raw_shots`` for the online :class:`~repro.serving.compiler
-.PrefixCompiler`) sit in a fourth stage, **waiting_on_prefix**
-(:meth:`Scheduler.park`), until the engine installs the compiled prefix
-and :meth:`Scheduler.wake`\\ s them into the head of the FIFO queue:
+Requests whose compressed prefix is not HBM-resident sit in a fourth
+stage, **waiting_on_prefix** (:meth:`Scheduler.park`), until the engine
+makes it resident and :meth:`Scheduler.wake`\\ s them into the head of
+the FIFO queue.  Two producers feed the stage — the online
+:class:`~repro.serving.compiler.PrefixCompiler` (requests carrying
+``raw_shots`` for an uncompiled task) and the :class:`~repro.serving
+.tiers.TieredPrefixStore` promotion path (a previously evicted prefix
+copying back from the host or disk tier) — and the scheduler cannot
+tell them apart: parking is keyed by prefix name alone.
 
     waiting_on_prefix ──wake──▶ queued ──admit──▶ running ──▶ finished
 """

@@ -37,8 +37,8 @@ from repro.sharding.rules import BASELINE_RULES, Rules, spec_for
 
 __all__ = [
     "BASELINE_RULES", "cache_shardings", "constrain_cache",
-    "constrain_heads", "leaf_spec", "model_axis_size", "shard_cache",
-    "shard_map_heads",
+    "constrain_heads", "leaf_sharding", "leaf_spec", "model_axis_size",
+    "shard_cache", "shard_map_heads",
 ]
 
 #: trailing logical dims per cache/prefix leaf key; leading dims (layer
@@ -80,6 +80,16 @@ def leaf_spec(key: Optional[str], ndim: int, shape: Tuple[int, ...],
         return P()
     logical = (None,) * (ndim - len(trailing)) + trailing
     return spec_for(shape, logical, mesh, rules)
+
+
+def leaf_sharding(key: Optional[str], arr, mesh: Mesh,
+                  rules: Rules = BASELINE_RULES) -> NamedSharding:
+    """NamedSharding for one cache/prefix leaf by its dict key — the
+    per-leaf form of :func:`cache_shardings`, used by the tiered store's
+    promotion path to ``device_put`` each host chunk directly into the
+    pool layout (no replicated detour, no second host round-trip)."""
+    return NamedSharding(
+        mesh, leaf_spec(key, arr.ndim, tuple(arr.shape), mesh, rules))
 
 
 def cache_shardings(tree, mesh: Mesh, rules: Rules = BASELINE_RULES):
