@@ -7,7 +7,10 @@ multi-tenant serving shape end to end, an ``online_compile`` section
 compile is in flight, interleaved vs fully stalled), and a
 ``prefix_tiering`` section (time-to-first-token down the HBM → host →
 disk → recompile ladder, and the decode dip while a demoted prefix
-promotes back, interleaved vs stalled).
+promotes back, interleaved vs stalled), and a ``traffic`` section
+(seeded Zipf/Poisson load over a catalog exceeding cache capacity:
+TTFT p50/p99, goodput, decode-gap p99 and tokens/s/device on a virtual
+clock, fixed vs autotuned budgets — ``benchmarks/traffic.py``).
 
 Measures (CPU wall-clock, informational) and reports the structural
 ratios that transfer to TPU: per-step attended KV slots, cache bytes,
@@ -34,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from benchmarks.traffic import run_traffic
 from repro.core import memcom
 from repro.models import transformer as tfm
 from repro.serving import Request, ServingEngine
@@ -109,6 +113,7 @@ def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False,
                             warm_new=12 if smoke else 24)
     pt = run_prefix_tiering(cfg0, target, mc, m, rng,
                             warm_new=12 if smoke else 24)
+    tr = run_traffic(cfg0, target, mc, m, rng, smoke=smoke)
     sd = run_sharded_decode(smoke) if sharded else None
 
     C.write_result("serving_bench", {
@@ -116,7 +121,8 @@ def run(ratio: int = 8, decode_steps: int = 16, smoke: bool = False,
         "ms_full": sec_full * 1e3, "ms_compressed": sec_comp * 1e3,
         "cache_bytes_full": bytes_full, "cache_bytes_compressed": bytes_comp,
         "continuous_batching": cb, "paged_vs_dense": pvd,
-        "online_compile": oc, "prefix_tiering": pt, "sharded_decode": sd})
+        "online_compile": oc, "prefix_tiering": pt, "traffic": tr,
+        "sharded_decode": sd})
     return rows
 
 

@@ -1,0 +1,208 @@
+"""Production-traffic benchmark: the serving stack under Zipf/Poisson load.
+
+The other ``serving_bench`` sections measure one mechanism at a time
+(one cold compile, one promotion, one refill).  This section measures
+the *composition*: a Zipf-popularity catalog of synthetic ICL tasks,
+sized to exceed ``prefix_capacity`` and ``host_capacity``, served under
+seeded Poisson (or bursty ON-OFF) arrivals with two priority classes —
+so online compiles, tier demotions/promotions, priority preemptions and
+the budget autotuner all fire in one run, and the scoreboard is the SLO
+view an operator would read: TTFT p50/p99, goodput (SLO-attained
+requests/s), decode-gap p99, tokens/s/device.
+
+Everything runs on a :class:`~repro.serving.clock.VirtualClock`: time
+advances only through the engine's ``charge()`` cost model, so the
+reported numbers are *simulated* seconds — a pure function of
+``(scenario, seed)``, byte-identical across hosts and CI runs
+(``tests/test_traffic.py`` locks this down).  Wall-clock is reported
+once, informationally, for the whole section.
+
+Two sub-runs share one trace:
+
+* **fixed** — the configured ``compile_token_budget`` /
+  ``promote_layer_budget`` all the way through;
+* **autotuned** — the engine halves/doubles those budgets against the
+  observed decode-gap (``autotune_budgets=True``), and the row reports
+  where the budgets landed.
+
+Run directly (``python -m benchmarks.traffic --smoke``) or through
+``python -m benchmarks.serving_bench``, which embeds the result under
+its ``traffic`` key.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import memcom
+from repro.models import transformer as tfm
+from repro.serving import ServingEngine, TrafficConfig, VirtualClock, \
+    generate_trace, slo_metrics
+
+
+def scenario(smoke: bool, *, process: str = "poisson",
+             num_tasks: int = None, num_requests: int = None,
+             rate_rps: float = None) -> TrafficConfig:
+    """The benchmark scenario.  Catalog ≫ prefix/host capacity (set in
+    :func:`run_traffic`) so the tail of the Zipf distribution churns
+    through demote/spill/promote while the head stays HBM-resident."""
+    if smoke:
+        base = dict(num_tasks=6, num_requests=16, context_tokens=24,
+                    rate_rps=300.0)
+    else:
+        base = dict(num_tasks=24, num_requests=96, context_tokens=48,
+                    rate_rps=200.0)
+    if num_tasks is not None:
+        base["num_tasks"] = num_tasks
+    if num_requests is not None:
+        base["num_requests"] = num_requests
+    if rate_rps is not None:
+        base["rate_rps"] = rate_rps
+    return TrafficConfig(process=process, zipf_alpha=1.1,
+                         priority_classes=2, priority_weights=(0.25, 0.75),
+                         **base)
+
+
+def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
+                compile_token_budget: int, promote_layer_budget: int,
+                prefix_capacity: int, host_capacity: int,
+                slo_ttft_s: float) -> dict:
+    """One engine lifetime over the trace.  Fresh temp disk dir per run:
+    a persistent one would carry spilled shards into the next run and
+    break the same-seed determinism the section advertises."""
+    disk = tempfile.mkdtemp(prefix="traffic-bench-")
+    clock = VirtualClock()
+    engine = ServingEngine(
+        cfg, target, slots=slots, max_len=m + 32, compressor=mc,
+        prefix_capacity=prefix_capacity,
+        compile_token_budget=compile_token_budget,
+        host_capacity=host_capacity, disk_dir=disk,
+        promote_layer_budget=promote_layer_budget,
+        clock=clock, priority_aging_s=0.05,
+        autotune_budgets=autotune,
+        target_decode_gap_s=2e-3 if autotune else None,
+        autotune_interval=8)
+    try:
+        t0 = time.perf_counter()
+        engine.serve(list(trace.requests))
+        wall_s = time.perf_counter() - t0
+        stats = engine.stats()
+        out = slo_metrics(engine.request_log, slo_ttft_s=slo_ttft_s,
+                          devices=1, gap_samples=engine.gap_samples)
+    finally:
+        shutil.rmtree(disk, ignore_errors=True)
+    es, ts, cs = stats["engine"], stats["prefix_tiers"], stats["compiler"]
+    # the section's whole point is the *composition* under churn — if the
+    # catalog stopped exceeding capacity these go quiet and the numbers
+    # measure nothing, so fail loudly rather than report a hollow row
+    assert cs["jobs"] > 0, "traffic scenario fired no online compiles"
+    assert ts["demotes"] > 0, "traffic scenario fired no tier demotions"
+    out.update({
+        "wall_s": wall_s,
+        "compiles": cs["jobs"],
+        "demotes": ts["demotes"], "spills": ts["spills"],
+        "promotes": ts["host_promotes"],
+        "autotune_shrinks": es["autotune_shrinks"],
+        "autotune_grows": es["autotune_grows"],
+        "final_budgets": {
+            "compile_token_budget":
+                stats["budgets"]["compile_token_budget"],
+            "promote_layer_budget":
+                stats["budgets"]["promote_layer_budget"]},
+    })
+    return out
+
+
+def run_traffic(cfg, target, mc, m, rng, *, smoke: bool = False,
+                seed: int = 0, process: str = "poisson",
+                num_tasks: int = None, num_requests: int = None,
+                rate_rps: float = None, slo_ttft_s: float = 0.02) -> dict:
+    """The ``traffic`` section: one seeded trace, served twice (fixed
+    budgets, then autotuned budgets) on fresh engines + virtual clocks."""
+    tcfg = scenario(smoke, process=process, num_tasks=num_tasks,
+                    num_requests=num_requests, rate_rps=rate_rps)
+    trace = generate_trace(tcfg, seed, vocab=C.VOCAB)
+    sizing = dict(slots=2 if smoke else 4,
+                  prefix_capacity=2 if smoke else 4,
+                  host_capacity=2 if smoke else 4,
+                  compile_token_budget=8 if smoke else 16,
+                  promote_layer_budget=1 if smoke else 2,
+                  slo_ttft_s=slo_ttft_s)
+    out = {"seed": seed, "process": tcfg.process,
+           "num_tasks": tcfg.num_tasks, "num_requests": tcfg.num_requests,
+           "rate_rps": tcfg.rate_rps, "zipf_alpha": tcfg.zipf_alpha,
+           "priority_classes": tcfg.priority_classes, **sizing}
+    rows = []
+    for mode, autotune in (("fixed", False), ("autotuned", True)):
+        r = _serve_once(cfg, target, mc, m, trace, autotune=autotune,
+                        **sizing)
+        out[mode] = r
+        fb = r["final_budgets"]
+        rows.append((
+            mode, f"{r['completed']}/{r['requests']}",
+            f"{r['ttft_p50_s']*1e3:.2f}", f"{r['ttft_p99_s']*1e3:.2f}",
+            f"{r['goodput_rps']:.1f}",
+            f"{r['tokens_per_s_per_device']:.0f}",
+            f"{r['decode_gap_p99_s']*1e3:.2f}",
+            r["preemptions"],
+            f"{r['compiles']}/{r['demotes']}/{r['promotes']}",
+            f"{fb['compile_token_budget']}/{fb['promote_layer_budget']}"))
+    print(C.fmt_table(rows, (
+        "budgets", "done", "TTFT p50 ms", "TTFT p99 ms", "goodput r/s",
+        "tok/s/dev", "gap p99 ms", "preempt", "compile/demote/promote",
+        "final budgets")) + "\n")
+    print(f"traffic: {tcfg.num_requests} requests over "
+          f"{tcfg.num_tasks} tasks (zipf {tcfg.zipf_alpha}, "
+          f"{tcfg.process} @ {tcfg.rate_rps:.0f} r/s), catalog exceeds "
+          f"prefix capacity {sizing['prefix_capacity']} — all times are "
+          "simulated (virtual clock), identical across runs for one "
+          "seed\n")
+    return out
+
+
+def main(argv=None):
+    import dataclasses
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="random-init target + small scenario (CI speed)")
+    ap.add_argument("--ratio", type=int, default=8, choices=sorted(C.RATIOS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--process", choices=("poisson", "onoff"),
+                    default="poisson")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="arrival rate (requests/s of simulated time)")
+    ap.add_argument("--slo-ttft", type=float, default=0.02,
+                    help="TTFT SLO in simulated seconds (goodput counts "
+                         "requests at or under this)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = C.target_config()
+        target = tfm.init_params(cfg, 0)
+    else:
+        cfg, target = C.get_or_pretrain_target()
+    m = C.RATIOS[args.ratio]
+    cfg = cfg.replace(
+        memcom=dataclasses.replace(cfg.memcom, num_memory_tokens=m))
+    mc = memcom.init_memcom(cfg, target, 1)
+    rng = np.random.default_rng(args.seed)
+    out = run_traffic(cfg, target, mc, m, rng, smoke=args.smoke,
+                      seed=args.seed, process=args.process,
+                      num_tasks=args.tasks, num_requests=args.requests,
+                      rate_rps=args.rate, slo_ttft_s=args.slo_ttft)
+    C.write_result("traffic_bench", {"ratio": args.ratio, "m": m,
+                                     "traffic": out})
+    return out
+
+
+if __name__ == "__main__":
+    main()

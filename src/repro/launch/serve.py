@@ -41,6 +41,18 @@ the partial tail block), so prefix memory is O(tasks) instead of
 O(slots).  ``--block-size``/``--num-blocks`` size the pool; admission is
 gated on free blocks.  See docs/ARCHITECTURE.md.
 
+``--traffic zipf`` (Poisson arrivals) / ``--traffic onoff`` (bursty
+ON-OFF) replaces the fixed request batch with a seeded production-shaped
+workload: a Zipf-popularity catalog of ``--traffic-tasks`` ICL tasks
+(requests carry raw shots, so unseen tasks compile online and evicted
+ones churn through the tiers) served at ``--traffic-rate`` requests per
+*simulated* second against the engine's virtual clock —
+``--priority-classes N`` splits requests into preemptible priority
+classes (``--priority-aging`` bounds starvation), ``--slo-ttft`` sets
+the TTFT SLO the goodput line reports against, and
+``--autotune-budgets`` lets the engine trade compile/promote budgets
+against the observed decode gap.  Same seed, same numbers, any host.
+
 ``--mesh M`` (or ``--mesh DxM``) runs the whole edge stage
 tensor-parallel: target params placed from their logical axes, KV
 caches/pools split by head over the mesh "model" axis, block tables and
@@ -172,6 +184,36 @@ def main():
                          "decode stalls for the full compile)")
     ap.add_argument("--stats", action="store_true",
                     help="print engine cache/compile counters after serving")
+    ap.add_argument("--traffic", choices=("zipf", "onoff"), default=None,
+                    help="serve a seeded synthetic workload instead of the "
+                         "fixed batch: Zipf-popularity task catalog under "
+                         "Poisson (zipf) or bursty ON-OFF (onoff) arrivals "
+                         "on the engine's virtual clock")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="traffic mode: priority classes to draw requests "
+                         "from (class 0 most urgent; >1 enables preemption "
+                         "pressure)")
+    ap.add_argument("--traffic-requests", type=int, default=32)
+    ap.add_argument("--traffic-tasks", type=int, default=8,
+                    help="catalog size; set above --prefix-capacity/"
+                         "--host-capacity to make the tiers churn")
+    ap.add_argument("--traffic-rate", type=float, default=200.0,
+                    help="arrival rate in requests per simulated second")
+    ap.add_argument("--zipf-alpha", type=float, default=1.1)
+    ap.add_argument("--priority-aging", type=float, default=None,
+                    help="seconds of queue wait per one-class priority "
+                         "boost (anti-starvation; default off)")
+    ap.add_argument("--slo-ttft", type=float, default=0.02,
+                    help="traffic mode: TTFT SLO in simulated seconds")
+    ap.add_argument("--autotune-budgets", action="store_true",
+                    help="halve/double --compile-budget/--promote-budget "
+                         "against the observed decode gap")
+    ap.add_argument("--target-gap", type=float, default=2e-3,
+                    help="decode-gap target (simulated s) for "
+                         "--autotune-budgets")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="traffic trace seed (same seed -> same workload "
+                         "and, on the virtual clock, same metrics)")
     ap.add_argument("--mesh", default=None,
                     help="serve tensor-parallel: M (model-parallel ways) or "
                          "DxM (data x model); forces the host device count "
@@ -195,6 +237,13 @@ def main():
     if args.raw_shots and args.classify:
         ap.error("--raw-shots serves generation traffic (classify goes "
                  "through the offline seat path)")
+    if args.traffic and (args.classify or args.raw_shots):
+        ap.error("--traffic generates its own raw-shot requests (drop "
+                 "--classify/--raw-shots)")
+    if args.autotune_budgets and \
+            args.compile_budget is None and args.promote_budget is None:
+        ap.error("--autotune-budgets needs --compile-budget and/or "
+                 "--promote-budget to tune")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -224,16 +273,32 @@ def main():
         rules = {"baseline": BASELINE_RULES, "fsdp": FSDP_RULES}[args.rules]
         print(f"[edge] tensor-parallel mesh {data}x{model} "
               f"(data x model), rules={args.rules}")
+    clock = None
+    if args.traffic:
+        # traffic replays timed arrivals against a virtual clock: time
+        # advances through the engine's work-cost model, so the SLO
+        # numbers are simulated seconds, reproducible for one seed
+        from repro.serving import VirtualClock
+
+        clock = VirtualClock()
     engine = ServingEngine(cfg, target, slots=args.slots,
                            max_len=m + 24 + args.max_new + 16,
                            kv_layout=args.kv_layout,
-                           compressor=compressor if args.raw_shots else None,
+                           compressor=(compressor
+                                       if args.raw_shots or args.traffic
+                                       else None),
                            compile_token_budget=args.compile_budget,
                            prefix_capacity=args.prefix_capacity,
                            host_capacity=args.host_capacity,
                            disk_dir=args.disk_dir,
                            promote_layer_budget=args.promote_budget,
                            mesh=mesh, rules=rules,
+                           clock=clock,
+                           priority_aging_s=args.priority_aging,
+                           autotune_budgets=args.autotune_budgets,
+                           target_decode_gap_s=(args.target_gap
+                                                if args.autotune_budgets
+                                                else None),
                            **paged_kw)
     if engine.tiers is not None:
         preloaded = engine.tiers.disk_names()
@@ -245,7 +310,7 @@ def main():
 
     tasks, payload = [], 0
     t0 = time.perf_counter()
-    for t in range(args.tasks):
+    for t in range(0 if args.traffic else args.tasks):
         task = ICLTaskSpec(vocab, num_labels=8, keys_per_label=4)
         episode = make_episode(task, rng)
         prompt = build_manyshot_prompt(task, episode, rng,
@@ -258,7 +323,9 @@ def main():
             payload += tree_bytes(kv)
         tasks.append((f"task{t}", task, episode, prompt))
     t_compress = time.perf_counter() - t0
-    if args.raw_shots:
+    if args.traffic:
+        pass  # the trace carries its own raw shots; no offline stage
+    elif args.raw_shots:
         print(f"[edge] no offline stage: {args.tasks} task(s) will compile "
               f"online, {'whole-task' if args.compile_budget is None else str(args.compile_budget) + '-token'} "
               "chunks interleaved with decode")
@@ -284,7 +351,54 @@ def main():
                        num_blocks=engine.alloc.num_blocks,
                        blocks_resident=engine.alloc.used_count)
 
-    if args.classify:
+    if args.traffic:
+        from repro.serving import TrafficConfig, generate_trace, slo_metrics
+
+        tcfg = TrafficConfig(
+            num_tasks=args.traffic_tasks, zipf_alpha=args.zipf_alpha,
+            context_tokens=args.context_tokens,
+            num_requests=args.traffic_requests,
+            process="poisson" if args.traffic == "zipf" else "onoff",
+            rate_rps=args.traffic_rate,
+            priority_classes=args.priority_classes)
+        trace = generate_trace(tcfg, args.seed, vocab=vocab)
+        print(f"[edge] traffic: {tcfg.num_requests} requests over "
+              f"{tcfg.num_tasks} task(s), zipf {tcfg.zipf_alpha}, "
+              f"{tcfg.process} arrivals @ {tcfg.rate_rps:.0f} r/s "
+              f"(simulated), {tcfg.priority_classes} priority class(es), "
+              f"seed {args.seed}")
+        t0 = time.perf_counter()
+        out = engine.serve(list(trace.requests))
+        wall = time.perf_counter() - t0
+        devices = 1
+        if args.mesh:
+            d_, m_ = _parse_mesh(args.mesh)
+            devices = d_ * m_
+        slo = slo_metrics(engine.request_log, slo_ttft_s=args.slo_ttft,
+                          devices=devices, gap_samples=engine.gap_samples)
+        generated = int(sum(len(v) for v in out.values()))
+        print(f"[edge] {slo['completed']}/{slo['requests']} completed, "
+              f"{generated} tokens in {slo['duration_s']*1e3:.1f} ms "
+              f"simulated ({wall:.2f}s wall): TTFT p50 "
+              f"{slo['ttft_p50_s']*1e3:.2f} / p99 "
+              f"{slo['ttft_p99_s']*1e3:.2f} ms, goodput "
+              f"{slo['goodput_rps']:.1f} r/s @ SLO "
+              f"{args.slo_ttft*1e3:.0f} ms, "
+              f"{slo['tokens_per_s_per_device']:.0f} tok/s/device, "
+              f"decode-gap p99 {slo['decode_gap_p99_s']*1e3:.2f} ms, "
+              f"{slo['preemptions']} preemption(s)")
+        for cls, row in sorted(slo["per_class"].items()):
+            print(f"[edge]   class {cls}: "
+                  f"{row['completed']}/{row['requests']} done, TTFT p50 "
+                  f"{row['ttft_p50_s']*1e3:.2f} ms, {row['slo_attained']} "
+                  f"in SLO, {row['preemptions']} preempted")
+        metrics["traffic"] = {
+            "process": tcfg.process, "seed": args.seed,
+            "traffic_tasks": tcfg.num_tasks, "rate_rps": tcfg.rate_rps,
+            "zipf_alpha": tcfg.zipf_alpha,
+            "priority_classes": tcfg.priority_classes,
+            "wall_s": wall, "generated": generated, **slo}
+    elif args.classify:
         hits = 0
         t0 = time.perf_counter()
         for i in range(args.requests):

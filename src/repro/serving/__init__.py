@@ -39,8 +39,15 @@ from repro.serving.prefix_store import (
     PrefixStore,
     write_prefix_to_cache,
 )
+from repro.serving.clock import VirtualClock
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.tiers import PromotionJob, TieredPrefixStore
+from repro.serving.traffic import (
+    Trace,
+    TrafficConfig,
+    generate_trace,
+    slo_metrics,
+)
 
 __all__ = [
     "ServingEngine", "Request", "Scheduler",
@@ -49,4 +56,6 @@ __all__ = [
     "TieredPrefixStore", "PromotionJob",
     "BlockAllocator", "BlockAllocationError", "OutOfBlocksError",
     "materialize_prefix", "write_prefix_to_cache",
+    "VirtualClock", "TrafficConfig", "Trace", "generate_trace",
+    "slo_metrics",
 ]

@@ -36,6 +36,7 @@ See docs/ARCHITECTURE.md for the request lifecycle.
 
 from __future__ import annotations
 
+import itertools
 from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
@@ -86,6 +87,8 @@ class CompileJob:
     state: Optional[memcom.CompressionState] = None
     materialized: Optional[dict] = None        # set when status >= compiled
     widths: List[int] = field(default_factory=list)  # chunk widths run
+    priority: int = 0                          # best class waiting on it
+    seq: int = 0                               # submission order (FIFO ties)
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -101,10 +104,12 @@ class PrefixCompiler:
     """Compiles raw many-shot prompts into materialized prefixes, a
     token-budgeted chunk at a time, with single-flight dedup per task.
 
-    Jobs advance strictly FIFO (one source cache lives at a time, so
-    in-flight compile memory is bounded by one task's window regardless
-    of queue depth).  ``step(budget)`` is the only compute entry point —
-    the serving loop calls it between decode steps.
+    A mid-flight job always runs to completion first (one source cache
+    lives at a time, so in-flight compile memory is bounded by one
+    task's window regardless of queue depth); among queued jobs the best
+    ``(priority, submission order)`` starts next — plain FIFO when every
+    request shares one priority class.  ``step(budget)`` is the only
+    compute entry point — the serving loop calls it between decode steps.
     """
 
     def __init__(self, compressor, cfg: ModelConfig, target_params, *,
@@ -123,6 +128,7 @@ class PrefixCompiler:
         self.mesh = mesh
         self.rules = rules
         self._jobs: "OrderedDict[str, CompileJob]" = OrderedDict()
+        self._seq = itertools.count()  # submission order for FIFO ties
         # compiled programs: chunk steps keyed by their static geometry
         # (offset, width, cache_len), the finish/materialize pass by its
         # chunk-width pattern.  All-but-last chunks share the budget width
@@ -147,19 +153,22 @@ class PrefixCompiler:
 
     # ---- queue side ----
 
-    def submit(self, name: str, raw_shots) -> CompileJob:
+    def submit(self, name: str, raw_shots, priority: int = 0) -> CompileJob:
         """Request compilation of ``raw_shots`` under ``name``.
 
         Single-flight: a second submit for a name whose job is still
         queued/compiling/compiled joins that job (first writer wins on
-        the token content).  Installed jobs were dropped from the table,
+        the token content; the job takes the *best* priority class any
+        joiner asked for).  Installed jobs were dropped from the table,
         so a name the store has since evicted is simply recompiled.
         """
         job = self._jobs.get(name)
         if job is not None:
             self.stats["deduped"] += 1
+            job.priority = min(job.priority, priority)
             return job
-        job = CompileJob(name=name, tokens=raw_shots)
+        job = CompileJob(name=name, tokens=raw_shots, priority=priority,
+                         seq=next(self._seq))
         self._jobs[name] = job
         self.stats["jobs"] += 1
         return job
@@ -257,8 +266,16 @@ class PrefixCompiler:
         finished: List[str] = []
         budget = token_budget
         while True:
+            # one live source cache at a time: a mid-flight job always
+            # runs to completion; otherwise the best (priority, seq)
+            # queued job starts — FIFO within a class
             job = next((j for j in self._jobs.values()
-                        if j.status in ("queued", "compiling")), None)
+                        if j.status == "compiling"), None)
+            if job is None:
+                queued = [j for j in self._jobs.values()
+                          if j.status == "queued"]
+                job = (min(queued, key=lambda j: (j.priority, j.seq))
+                       if queued else None)
             if job is None or (budget is not None and budget <= 0):
                 break
             if job.state is None:

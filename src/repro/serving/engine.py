@@ -41,6 +41,28 @@ instead of destroying it, and a request naming a cold prefix parks
 ``promote_layer_budget``-chunk steps interleaved with decode — the same
 stay-responsive contract as online compilation.
 
+Scheduling under load (the traffic harness, ``serving/traffic.py``):
+
+* ``Request.priority`` classes (lower = more urgent) with an optional
+  anti-starvation aging rule (``priority_aging_s=``), FIFO within class;
+* **preemption** — when the best queued request's class outranks a
+  running slot's and it cannot be admitted, the worst victim slot is
+  evicted: its paged blocks are released (the prefix itself stays
+  store-resident and demotes through the normal tier path under
+  pressure), the request re-queues at its arrival position, and on
+  re-admission the engine re-prefills ``prompt + already-emitted`` so
+  decode resumes token-exact — the same machinery as a mid-decode refill;
+* ``Request.arrival_s`` replays a timed trace: serve() holds each
+  request until the engine clock reaches its offset;
+* an injected ``clock=`` (see :class:`~repro.serving.clock.VirtualClock`)
+  makes every timing — arrivals, TTFT, decode gaps, aging, the budget
+  autotuner — a deterministic function of the work performed, so the
+  whole simulation is reproducible in CI; the default is wall time;
+* ``autotune_budgets=`` trades ``compile_token_budget`` /
+  ``promote_layer_budget`` against the observed decode gap: budgets are
+  halved while the mean gap overshoots ``target_decode_gap_s`` and
+  doubled back (capped at 8× the configured value) while it undershoots.
+
 See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 """
 
@@ -143,7 +165,12 @@ class ServingEngine:
                  host_capacity: Optional[int] = None,
                  disk_dir: Optional[str] = None,
                  promote_layer_budget: Optional[int] = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 clock=None, priority_aging_s: Optional[float] = None,
+                 preemption: bool = True,
+                 autotune_budgets: bool = False,
+                 target_decode_gap_s: Optional[float] = None,
+                 autotune_interval: int = 16):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
@@ -151,6 +178,30 @@ class ServingEngine:
             raise ValueError("compile_token_budget must be >= 1 (or None)")
         if promote_layer_budget is not None and promote_layer_budget < 1:
             raise ValueError("promote_layer_budget must be >= 1 (or None)")
+        if autotune_budgets:
+            if target_decode_gap_s is None or target_decode_gap_s <= 0:
+                raise ValueError("autotune_budgets needs a positive "
+                                 "target_decode_gap_s")
+            if compile_token_budget is None and promote_layer_budget is None:
+                raise ValueError("autotune_budgets needs at least one of "
+                                 "compile_token_budget/promote_layer_budget")
+            if autotune_interval < 1:
+                raise ValueError("autotune_interval must be >= 1")
+        # injected clock (VirtualClock in tests/simulation, wall time in
+        # production).  charge()/advance_to() are duck-typed: absent on a
+        # wall clock, charging is a no-op and waits become short sleeps.
+        self.clock = clock if clock is not None else time.perf_counter
+        charge = getattr(self.clock, "charge", None)
+        self._charge = charge if charge is not None else (lambda *_: None)
+        self.priority_aging_s = priority_aging_s
+        self.preemption = preemption
+        self._autotune = autotune_budgets
+        self.target_decode_gap_s = target_decode_gap_s
+        self.autotune_interval = autotune_interval
+        self._budget_init = (compile_token_budget, promote_layer_budget)
+        self._gap_samples: List[float] = []  # every decode gap (p50/p99)
+        self._gap_window: List[float] = []   # gaps since last autotune step
+        self.request_log: Dict[int, dict] = {}  # per-request SLO timings
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -189,6 +240,8 @@ class ServingEngine:
             "decode_steps_during_promote": 0, "promote_steps_interleaved": 0,
             "decode_gap_max_s": 0.0, "decode_gap_sum_s": 0.0,
             "decode_gaps": 0, "decode_time_s": 0.0,
+            "preemptions": 0, "preempted_tokens_refilled": 0,
+            "autotune_shrinks": 0, "autotune_grows": 0,
         }
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
@@ -427,17 +480,42 @@ class ServingEngine:
         most ``promote_layer_budget`` per-layer chunks per iteration —
         promotion beats recompiling even when the request carries
         ``raw_shots``.
+
+        Requests carrying ``arrival_s`` are held until the engine clock
+        reaches that offset from serve() start — that is how the traffic
+        harness replays a timed Poisson/ON-OFF trace.  Per-request
+        timings (arrival, first token, finish, preemption count) land in
+        ``self.request_log`` for the SLO metrics.
         """
-        sched = Scheduler(self.slots)
+        epoch = self.clock()  # request_log times are offsets from here
+        sched = Scheduler(self.slots, clock=self.clock,
+                          aging_interval_s=self.priority_aging_s)
         self.trace = []
+        self.request_log = {}
         requests = list(requests)
         # validate the whole batch before the first side effect: a bad
         # request must not leave earlier ones' compile jobs orphaned in
         # the (engine-lifetime) compiler with their waiters discarded
         for req in requests:
             self._check_request(req)
-        for req in requests:
+
+        def _arrive(req: Request) -> None:
+            self.request_log[req.uid] = {
+                "priority": int(req.priority),
+                "arrival_s": float(req.arrival_s if req.arrival_s is not None
+                                   else self.clock() - epoch),
+                "first_token_s": None, "finish_s": None,
+                "tokens": 0, "preemptions": 0,
+            }
             self._submit(sched, req)
+
+        # timed requests wait in arrival order until the clock reaches
+        # them; untimed ones submit immediately (classic batch serve)
+        future = sorted((r for r in requests if r.arrival_s is not None),
+                        key=lambda r: (r.arrival_s, r.uid))
+        for req in requests:
+            if req.arrival_s is None:
+                _arrive(req)
 
         # per-request sampling streams: folding Request.uid into the seed
         # makes each request's tokens a function of (seed, request) alone —
@@ -457,7 +535,10 @@ class ServingEngine:
         pending = np.zeros((self.slots,), np.int32)  # next token per slot
         lengths = self.base.copy()  # per-slot valid cache length
         paged = self.kv_layout == "paged"
-        can_seat = self._can_admit if paged else None
+        # a resumed request re-prefills prompt + already-emitted tokens,
+        # so the paged gate must size its window on that longer prefill
+        can_seat = ((lambda r: self._can_admit(r, sched.resume_len(r.uid)))
+                    if paged else None)
         last_decode_done: Optional[float] = None
 
         def _finish(slot):
@@ -466,8 +547,20 @@ class ServingEngine:
                 self._reserved[slot] = 0  # unused decode headroom returns
             streams.pop(req.uid, None)
             results[req.uid] = toks
+            log = self.request_log[req.uid]
+            log["finish_s"] = self.clock() - epoch
+            log["tokens"] = int(len(toks))
 
-        while sched.has_work():
+        while sched.has_work() or future:
+            # release timed arrivals whose moment has come
+            now_s = self.clock() - epoch
+            while future and future[0].arrival_s <= now_s:
+                _arrive(future.pop(0))
+            if not sched.has_work():
+                # idle until the next arrival: a virtual clock jumps
+                # there, a wall clock sleeps in short slices
+                self._advance_to(epoch + future[0].arrival_s)
+                continue
             if self.compiler is not None:
                 self._drain_compiler(sched)
             if self.tiers is not None:
@@ -486,6 +579,8 @@ class ServingEngine:
                         f"{self.block_size}) cannot hold the next request "
                         "even with every free slot reclaimed — grow "
                         "num_blocks or evict resident prefixes")
+            if self.preemption and sched.pending:
+                admitted += self._preempt_for_priority(sched, can_seat)
             for slot, req in admitted:
                 if req.prefix is not None:
                     # skip the re-seat when the slot provably still holds
@@ -495,27 +590,43 @@ class ServingEngine:
                         self.seat_prefix(slot, req.prefix)
                 else:
                     self._reset_slot(slot)
+                # a preempted request resumes by re-prefilling everything
+                # it had already consumed *and emitted* behind the seated
+                # prefix — byte-for-byte the refill path, so the rebuilt
+                # KV state (and thus every later token) is exact
+                resumed = sched.emitted_tokens(slot)
+                toks = (np.concatenate([req.tokens, resumed])
+                        if resumed.size else req.tokens)
                 if paged:
                     # the gate's pending reservation becomes this slot's:
                     # prefill allocates its share now, the rest stays
                     # reserved for the decode steps to draw down
                     self._reserved_pending -= self._blocks_needed(
-                        req, self._req_base(req))  # what the gate added
+                        req, self._req_base(req),
+                        extra=resumed.size)  # what the gate added
                     base = int(self.base[slot])
-                    need = self._blocks_needed(req, base)
-                    n = len(req.tokens)
+                    need = self._blocks_needed(req, base, extra=resumed.size)
+                    n = len(toks)
                     width = (_bucket(n, self.max_len - base)
                              if self._pad_prefill else n)
                     covered = (self.alloc.blocks_for(base + width)
                                - self.alloc.blocks_for(base)
                                + (1 if base % self.block_size else 0))
                     self._reserved[slot] = max(0, need - covered)
-                row_logits = self._prefill_slot(slot, req.tokens)
-                lengths[slot] = self.base[slot] + len(req.tokens)
+                row_logits = self._prefill_slot(slot, toks)
+                lengths[slot] = self.base[slot] + len(toks)
+                if resumed.size:
+                    self._counters["preempted_tokens_refilled"] += \
+                        int(resumed.size)
+                    self.trace.append(("resume", req.uid, slot,
+                                       int(resumed.size)))
                 tok = self._sample_row(row_logits, req.temperature,
                                        _stream(req))
                 pending[slot] = tok
                 self.trace.append(("admit", req.uid, slot))
+                log = self.request_log[req.uid]
+                if log["first_token_s"] is None:
+                    log["first_token_s"] = self.clock() - epoch
                 if sched.record_token(slot, tok):
                     _finish(slot)
             active = sched.active_slots()
@@ -545,15 +656,16 @@ class ServingEngine:
                 # own stale blocks or the trash block — both masked)
                 self._ensure_decode_blocks(active, lengths)
                 step_args = (jnp.asarray(self.tables),)
-            t_start = time.perf_counter()
+            t_start = self.clock()
             out, self.cache = step(
                 self.params, self.cache, jnp.asarray(pending[:, None]),
                 jnp.asarray(lengths, jnp.int32), *step_args)
+            self._charge("decode_step", 1)
             # the batched step advances *every* slot's recurrent state
             # (idle rows included), so all slots are dirty from here on
             self._dirty[:] = True
             out = np.asarray(out)  # greedy: (slots,) ids; else full logits
-            self._counters["decode_time_s"] += time.perf_counter() - t_start
+            self._counters["decode_time_s"] += self.clock() - t_start
             if last_decode_done is not None:
                 # decode gap = non-decode time since the previous step —
                 # admissions, prefills, and (above all) compile chunks;
@@ -563,7 +675,9 @@ class ServingEngine:
                 c["decode_gap_max_s"] = max(c["decode_gap_max_s"], gap)
                 c["decode_gap_sum_s"] += gap
                 c["decode_gaps"] += 1
-            last_decode_done = time.perf_counter()
+                self._gap_samples.append(gap)
+                self._gap_window.append(gap)
+            last_decode_done = self.clock()
             self._counters["decode_steps"] += 1
             if compiling:
                 self._counters["decode_steps_during_compile"] += 1
@@ -589,7 +703,91 @@ class ServingEngine:
                 # HBM chunks behind this decode step, then decode again
                 self._promote_step(self.promote_layer_budget)
                 self._counters["promote_steps_interleaved"] += 1
+            if self._autotune and \
+                    len(self._gap_window) >= self.autotune_interval:
+                self._autotune_step()
         return results
+
+    def _preempt_for_priority(self, sched: Scheduler, can_seat):
+        """Evict at most one running slot when the best queued request's
+        class strictly outranks it (base classes — aging never triggers
+        preemption) and admission left it stuck.  The victim is the worst
+        running request (lowest class, then most emitted tokens, then
+        highest slot); its paged blocks are released (the prefix itself
+        stays store-resident and demotes through the normal tier path
+        under capacity pressure) and the scheduler stashes its emitted
+        tokens for a token-exact resume.  Returns the (slot, request)
+        pairs the retried admission seated.  One victim per loop
+        iteration bounds preemption thrash."""
+        cand = sched.best_queued()
+        if cand is None:
+            return []
+        victims = [s for s in sched.active_slots()
+                   if sched.request_in(s).priority > cand.priority]
+        if not victims:
+            return []
+        victim = max(victims, key=lambda s: (sched.request_in(s).priority,
+                                             len(sched.emitted_tokens(s)), s))
+        req = sched.preempt(victim)
+        if self.kv_layout == "paged":
+            self._release_slot_blocks(victim)
+            self._reserved[victim] = 0
+            self.base[victim] = 0
+            self._seated[victim] = None
+        self._counters["preemptions"] += 1
+        self.request_log[req.uid]["preemptions"] += 1
+        self.trace.append(("preempt", req.uid, victim))
+        return sched.admit(can_seat)
+
+    def _advance_to(self, t: float) -> None:
+        """Wait until the clock reads ``t``: a virtual clock jumps there;
+        a wall clock sleeps one short slice (the loop re-checks)."""
+        jump = getattr(self.clock, "advance_to", None)
+        if jump is not None:
+            jump(t)
+            return
+        dt = t - self.clock()
+        if dt > 0:
+            time.sleep(min(dt, 0.02))
+
+    def _autotune_step(self) -> None:
+        """Feedback controller on the compile/promote budgets: while the
+        mean decode gap over the last window overshoots the target, halve
+        the budgets (smaller interleaved slices → tighter gaps, slower
+        compile/promote completion); while it undershoots half the
+        target, double them back, capped at 8× their configured values."""
+        window = self._gap_window
+        mean_gap = sum(window) / len(window)
+        del window[:]
+        init_c, init_p = self._budget_init
+        if mean_gap > self.target_decode_gap_s:
+            changed = False
+            if self.compile_token_budget is not None \
+                    and self.compile_token_budget > 1:
+                self.compile_token_budget = self.compile_token_budget // 2
+                changed = True
+            if self.promote_layer_budget is not None \
+                    and self.promote_layer_budget > 1:
+                self.promote_layer_budget = self.promote_layer_budget // 2
+                changed = True
+            if changed:
+                self._counters["autotune_shrinks"] += 1
+                self.trace.append(("autotune", "shrink",
+                                   self.compile_token_budget,
+                                   self.promote_layer_budget))
+        elif mean_gap < self.target_decode_gap_s / 2:
+            changed = False
+            if init_c is not None and self.compile_token_budget < init_c * 8:
+                self.compile_token_budget = self.compile_token_budget * 2
+                changed = True
+            if init_p is not None and self.promote_layer_budget < init_p * 8:
+                self.promote_layer_budget = self.promote_layer_budget * 2
+                changed = True
+            if changed:
+                self._counters["autotune_grows"] += 1
+                self.trace.append(("autotune", "grow",
+                                   self.compile_token_budget,
+                                   self.promote_layer_budget))
 
     # ------------------------------------------------------------------
     # Online prefix compilation (PrefixCompiler integration)
@@ -636,9 +834,11 @@ class ServingEngine:
             if not hit:
                 if self.tiers is not None and \
                         self.tiers.cold_resident(req.prefix):
-                    self.tiers.submit_promotion(req.prefix)
+                    self.tiers.submit_promotion(req.prefix,
+                                                priority=req.priority)
                 else:
-                    self.compiler.submit(req.prefix, req.raw_shots)
+                    self.compiler.submit(req.prefix, req.raw_shots,
+                                         priority=req.priority)
                 sched.park(req)
                 self.trace.append(("park", req.uid, req.prefix))
                 return
@@ -656,6 +856,7 @@ class ServingEngine:
         self.compiler.step(token_budget)
         consumed = self.compiler.stats["tokens"] - before
         if consumed:
+            self._charge("compile_token", consumed)
             self.trace.append(("compile", consumed))
 
     # ------------------------------------------------------------------
@@ -667,6 +868,7 @@ class ServingEngine:
         self.tiers.promote_step(chunk_budget)
         copied = self.tiers.tier_stats["promote_chunks"] - before
         if copied:
+            self._charge("promote_chunk", copied)
             self.trace.append(("promote", copied))
 
     def _drain_promoter(self, sched: Scheduler) -> None:
@@ -762,6 +964,8 @@ class ServingEngine:
         after their untimed jit-warmup serves."""
         for k in self._counters:
             self._counters[k] = type(self._counters[k])(0)
+        self._gap_samples = []
+        self._gap_window = []
         for k in self.store.stats:
             self.store.stats[k] = 0
         if self.compiler is not None:
@@ -777,11 +981,24 @@ class ServingEngine:
         compiler's job/chunk/dedup counters, and (paged) pool occupancy.
         Reported by ``launch/serve.py --stats`` and read by the
         ``online_compile`` section of ``benchmarks/serving_bench.py``."""
+        engine = dict(self._counters)
+        gaps = self._gap_samples
+        engine["decode_gap_p50_s"] = \
+            float(np.percentile(gaps, 50)) if gaps else 0.0
+        engine["decode_gap_p99_s"] = \
+            float(np.percentile(gaps, 99)) if gaps else 0.0
         out: Dict[str, Optional[dict]] = {
-            "engine": dict(self._counters),
+            "engine": engine,
             "prefix_store": dict(self.store.stats),
             "compiler": (dict(self.compiler.stats)
                          if self.compiler is not None else None),
+            # live budget values sit outside _counters: the autotuner
+            # mutates them and reset_stats must not zero them
+            "budgets": {
+                "compile_token_budget": self.compile_token_budget,
+                "promote_layer_budget": self.promote_layer_budget,
+                "autotune": bool(self._autotune),
+            },
         }
         if self.tiers is not None:
             out["prefix_tiers"] = self.tiers.tier_snapshot()
@@ -797,6 +1014,12 @@ class ServingEngine:
                            for name in self.mesh.axis_names}
         return out
 
+    @property
+    def gap_samples(self) -> List[float]:
+        """Every decode gap observed since the last reset_stats() — the
+        traffic harness computes its decode-gap percentiles from these."""
+        return list(self._gap_samples)
+
     def _prefill_slot(self, slot: int, tokens: np.ndarray,
                       persist: bool = True) -> np.ndarray:
         """Prefill one slot's prompt behind its seated prefix; returns the
@@ -808,6 +1031,7 @@ class ServingEngine:
         assert 0 < n <= cap, (n, cap)
         self._counters["prefills"] += 1
         width = _bucket(n, cap) if self._pad_prefill else n
+        self._charge("prefill_token", width)
         padded = np.zeros((1, width), np.int32)
         padded[0, :n] = tokens
         if self.kv_layout == "paged":
@@ -895,13 +1119,16 @@ class ServingEngine:
                 # cheaper than a corrupted shared prefix)
                 self._cow_block(slot, bi)
 
-    def _blocks_needed(self, req: Request, base: int) -> int:
+    def _blocks_needed(self, req: Request, base: int, extra: int = 0) -> int:
         """Worst-case private blocks for a request's whole window:
-        prefill bucket, decode budget, and a possible tail-block COW."""
-        n = len(req.tokens)
+        prefill bucket, decode budget, and a possible tail-block COW.
+        ``extra`` counts already-emitted tokens a preempted request will
+        re-prefill on resume (they move from the decode budget into the
+        prefill width, which can only widen the bucket)."""
+        n = len(req.tokens) + extra
         cap = self.max_len - base
         width = _bucket(n, cap) if self._pad_prefill else n
-        total = base + max(width, n + req.max_new)
+        total = base + max(width, len(req.tokens) + req.max_new)
         return (self.alloc.blocks_for(total) - self.alloc.blocks_for(base)
                 + (1 if base % self.block_size else 0))
 
@@ -909,13 +1136,13 @@ class ServingEngine:
         return (self.store.base_len(req.prefix) if req.prefix
                 else self.base_len)
 
-    def _can_admit(self, req: Request) -> bool:
+    def _can_admit(self, req: Request, extra: int = 0) -> bool:
         """Free-block admission gate: the request's whole private window
         must fit in the pool *net of other active slots' outstanding
         reservations* — a seated slot never stalls (or dies) mid-decode
         waiting for memory.  A True return reserves the window: the
         scheduler admits exactly the requests this approves."""
-        need = self._blocks_needed(req, self._req_base(req))
+        need = self._blocks_needed(req, self._req_base(req), extra=extra)
         outstanding = int(self._reserved.sum()) + self._reserved_pending
         if need > self.alloc.free_count - outstanding:
             return False

@@ -23,15 +23,43 @@ copying back from the host or disk tier) — and the scheduler cannot
 tell them apart: parking is keyed by prefix name alone.
 
     waiting_on_prefix ──wake──▶ queued ──admit──▶ running ──▶ finished
+                                   ▲                  │
+                                   └────preempt───────┘
+
+Priority classes
+----------------
+``Request.priority`` is an integer class, **lower = more urgent**
+(class 0 outranks class 1).  Admission picks the queued request with the
+smallest ``(effective_class, arrival)`` key, so order stays strictly
+FIFO *within* a class — with a single class this degrades to the plain
+FIFO the engine shipped with.  An optional anti-starvation rule ages
+parked work: with ``aging_interval_s`` set, a request's effective class
+drops by one for every interval it has waited, bounding how long a
+low-priority request can be starved by a stream of urgent arrivals.
+Aging affects *admission order only* — preemption (below) compares base
+classes, so an aged request never evicts a genuinely higher class.
+
+Preemption
+----------
+:meth:`Scheduler.preempt` evicts a running slot: the request returns to
+the queue at its original arrival position (same rule as :meth:`wake`)
+and its already-emitted tokens are stashed.  When the request is later
+re-admitted, the stash resumes the slot — :meth:`emitted_tokens` lets
+the engine re-prefill ``prompt + emitted`` so decode continues from the
+exact KV state it was evicted with, and :meth:`record_token` keeps
+counting against the original ``max_new`` budget.  The engine drives the
+policy (who gets preempted, and the KV/block cleanup); the scheduler
+only guarantees the bookkeeping is token-exact.
 """
 
 from __future__ import annotations
 
 import hashlib
 import itertools
+import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -54,6 +82,12 @@ class Request:
     ``prefix`` the name is content-addressed from the shot bytes, so
     byte-identical shot sets from different requests dedup onto one
     compilation and one stored prefix.
+
+    ``priority``: integer class, lower = more urgent; 0 is the default
+    and highest class.  ``arrival_s``: optional arrival time in seconds
+    *relative to the start of* :meth:`~repro.serving.engine.ServingEngine
+    .serve` — the engine holds the request until its clock reaches it,
+    which is how the traffic harness replays a Poisson trace.
     """
 
     tokens: np.ndarray                 # (S,) int32 prompt
@@ -62,6 +96,8 @@ class Request:
     stop_token: Optional[int] = None
     temperature: float = 0.0
     raw_shots: Optional[np.ndarray] = None  # (T,) int32 many-shot context
+    priority: int = 0                  # class; lower admits/decodes first
+    arrival_s: Optional[float] = None  # offset from serve() start
     uid: int = field(default_factory=lambda: next(_UIDS))
 
     def __post_init__(self):
@@ -70,6 +106,10 @@ class Request:
             raise ValueError("prompt must contain at least one token")
         if self.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.priority < 0:
+            raise ValueError("priority classes are non-negative integers")
+        if self.arrival_s is not None and self.arrival_s < 0:
+            raise ValueError("arrival_s must be >= 0")
         if self.raw_shots is not None:
             self.raw_shots = np.asarray(self.raw_shots, np.int32).reshape(-1)
             if self.raw_shots.size == 0:
@@ -88,8 +128,14 @@ class _SlotState:
 class Scheduler:
     """Admits ragged requests into a fixed pool of batch slots."""
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, *,
+                 clock: Optional[Callable[[], float]] = None,
+                 aging_interval_s: Optional[float] = None):
         self.num_slots = num_slots
+        self.clock = clock if clock is not None else time.perf_counter
+        if aging_interval_s is not None and aging_interval_s <= 0:
+            raise ValueError("aging_interval_s must be positive")
+        self.aging_interval_s = aging_interval_s
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * num_slots
         # waiting_on_prefix stage: prefix name -> requests parked until the
@@ -100,12 +146,16 @@ class Scheduler:
         # that arrived before them — whichever compile finished first
         self._arrival = itertools.count()
         self._order: dict = {}
+        self._arrive_t: dict = {}   # uid -> clock time first seen (for aging)
+        self._resume: dict = {}     # uid -> tokens emitted before preemption
+        self.preemptions = 0
 
     # ---- queue side ----
 
     def _stamp(self, request: Request) -> None:
         if request.uid not in self._order:
             self._order[request.uid] = next(self._arrival)
+            self._arrive_t[request.uid] = self.clock()
 
     def submit(self, request: Request) -> int:
         self._stamp(request)
@@ -119,6 +169,36 @@ class Scheduler:
     def has_work(self) -> bool:
         return (bool(self._queue) or bool(self._waiting)
                 or any(s is not None for s in self._slots))
+
+    # ---- priority / aging ----
+
+    def effective_class(self, request: Request,
+                        now: Optional[float] = None) -> int:
+        """The priority class after anti-starvation aging: every
+        ``aging_interval_s`` a request has waited shaves one class off,
+        floored at 0.  With aging disabled this is just the base class."""
+        if self.aging_interval_s is None or request.priority == 0:
+            return request.priority
+        now = self.clock() if now is None else now
+        waited = max(0.0, now - self._arrive_t.get(request.uid, now))
+        return max(0, request.priority - int(waited // self.aging_interval_s))
+
+    def _best_index(self) -> int:
+        """Index into the arrival-ordered queue of the request with the
+        smallest (effective_class, arrival) key.  The queue itself stays
+        arrival-ordered, so ties break FIFO for free."""
+        now = self.clock()
+        best, best_key = 0, None
+        for i, req in enumerate(self._queue):
+            key = (self.effective_class(req, now), self._order[req.uid])
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def best_queued(self) -> Optional[Request]:
+        """The request admit() would pick next, or None — the engine's
+        preemption policy compares this against the running slots."""
+        return self._queue[self._best_index()] if self._queue else None
 
     # ---- waiting_on_prefix stage ----
 
@@ -139,6 +219,17 @@ class Scheduler:
     def waiting_on(self, name: str) -> List[Request]:
         return list(self._waiting.get(name, ()))
 
+    def _insert_by_arrival(self, req: Request) -> None:
+        """Re-enter the queue at the original arrival position: ahead of
+        everything that arrived later, behind everything earlier."""
+        seq = self._order[req.uid]
+        idx = 0
+        for queued in self._queue:
+            if self._order[queued.uid] > seq:
+                break
+            idx += 1
+        self._queue.insert(idx, req)
+
     def wake(self, name: str) -> List[Request]:
         """Move every request parked on ``name`` back into the FIFO queue
         at its *original arrival position*: a woken request precedes
@@ -147,13 +238,7 @@ class Scheduler:
         still queued).  Returns the woken requests."""
         woken = self._waiting.pop(name, [])
         for req in woken:
-            seq = self._order[req.uid]
-            idx = 0
-            for queued in self._queue:
-                if self._order[queued.uid] > seq:
-                    break
-                idx += 1
-            self._queue.insert(idx, req)
+            self._insert_by_arrival(req)
         return woken
 
     def referenced_prefixes(self) -> set:
@@ -182,23 +267,57 @@ class Scheduler:
         return state.request
 
     def admit(self, can_seat=None) -> List[Tuple[int, Request]]:
-        """Seat queued requests into free slots (FIFO). Returns the
+        """Seat queued requests into free slots. Returns the
         (slot, request) pairs admitted this call.
 
-        ``can_seat(request) -> bool`` gates admission on engine capacity
-        (the paged engine passes its free-block check).  Admission stays
-        strictly FIFO: the first request that does not fit stops the scan
-        — later, smaller requests are *not* admitted around it."""
+        Each free slot takes the queued request with the smallest
+        ``(effective_class, arrival)`` key — plain FIFO when every
+        request shares one class.  ``can_seat(request) -> bool`` gates
+        admission on engine capacity (the paged engine passes its
+        free-block check).  The first best-ranked request that does not
+        fit stops the scan — later, smaller requests are *not* admitted
+        around it, preserving the no-overtake guarantee within a class."""
         seated = []
         for slot in self.free_slots():
             if not self._queue:
                 break
-            if can_seat is not None and not can_seat(self._queue[0]):
+            idx = self._best_index()
+            req = self._queue[idx]
+            if can_seat is not None and not can_seat(req):
                 break
-            req = self._queue.popleft()
-            self._slots[slot] = _SlotState(req)
+            del self._queue[idx]
+            resumed = self._resume.pop(req.uid, None)
+            self._slots[slot] = _SlotState(req, emitted=list(resumed or ()))
             seated.append((slot, req))
         return seated
+
+    def emitted_tokens(self, slot: int) -> np.ndarray:
+        """Tokens the seated request has already emitted — non-empty only
+        for a preempted-and-resumed request, where the engine must
+        re-prefill ``prompt + emitted`` to rebuild the evicted KV state."""
+        state = self._slots[slot]
+        assert state is not None, f"slot {slot} is free"
+        return np.asarray(state.emitted, np.int32)
+
+    def resume_len(self, uid: int) -> int:
+        """How many stashed tokens a queued request will resume with (0
+        for fresh requests) — the engine's block-capacity gate adds this
+        to the prompt length before admission."""
+        return len(self._resume.get(uid, ()))
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a running slot back into the queue (token-exact): the
+        emitted tokens are stashed for resumption and the request
+        re-enters at its original arrival position.  The caller (engine)
+        owns releasing the slot's KV/blocks."""
+        state = self._slots[slot]
+        assert state is not None, f"slot {slot} is free"
+        self._slots[slot] = None
+        req = state.request
+        self._resume[req.uid] = list(state.emitted)
+        self._insert_by_arrival(req)
+        self.preemptions += 1
+        return req
 
     def record_token(self, slot: int, token: int) -> bool:
         """Append a sampled token to a slot's output. Returns True when the

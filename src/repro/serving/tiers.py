@@ -54,6 +54,7 @@ hierarchy".
 from __future__ import annotations
 
 import hashlib
+import itertools
 import os
 import struct
 from collections import OrderedDict, deque
@@ -112,6 +113,8 @@ class PromotionJob:
     status: str = "promoting"         # -> "ready" (installed jobs are dropped)
     row: Optional[dict] = None        # assembled device row when ready
     total_chunks: int = 0
+    priority: int = 0                 # best class waiting on it
+    seq: int = 0                      # submission order (FIFO ties)
 
     @property
     def remaining(self) -> int:
@@ -153,6 +156,7 @@ class TieredPrefixStore:
         self._disk: Dict[str, str] = {}       # name -> shard path
         self._disk_base: Dict[str, int] = {}
         self._jobs: "OrderedDict[str, PromotionJob]" = OrderedDict()
+        self._job_seq = itertools.count()  # submission order for FIFO ties
         self.tier_stats: Dict[str, int] = {
             "hbm_hits": 0,        # serve-path lookups answered from HBM
             "host_promotes": 0,   # completed host→HBM promotions
@@ -364,13 +368,16 @@ class TieredPrefixStore:
     # Upward path: budgeted, chunked promotion
     # ------------------------------------------------------------------
 
-    def submit_promotion(self, name: str) -> PromotionJob:
+    def submit_promotion(self, name: str, priority: int = 0) -> PromotionJob:
         """Start (or join — single-flight per name) the host→HBM copy of
         a cold prefix.  A disk-resident prefix is loaded into the job
         first (counted ``disk_loads``); its shard stays on disk until the
-        promoted row is installed."""
+        promoted row is installed.  The job takes the best priority class
+        any joiner asked for; :meth:`promote_step` serves jobs in
+        ``(priority, submission order)`` order."""
         job = self._jobs.get(name)
         if job is not None:
+            job.priority = min(job.priority, priority)
             return job
         if name in self._host:
             row, source = self._host[name], "host"
@@ -383,7 +390,8 @@ class TieredPrefixStore:
             raise KeyError(f"prefix {name!r} is not in a cold tier; "
                            f"tiers: {self.names() or '(none)'}")
         job = PromotionJob(name=name, source=source, host_row=row,
-                           base_len=_row_base_len(row))
+                           base_len=_row_base_len(row), priority=priority,
+                           seq=next(self._job_seq))
         for i, entry in enumerate(row.get("prefix", [])):
             if entry:
                 job.pending.append(("prefix", i, entry))
@@ -412,12 +420,17 @@ class TieredPrefixStore:
     def promote_step(self, chunk_budget: Optional[int] = None) -> List[str]:
         """Copy up to ``chunk_budget`` per-layer chunks host→HBM (``None``
         = run the head job to completion — the stalled baseline).  Jobs
-        advance strictly FIFO; returns the names that turned ready."""
+        advance in ``(priority, submission order)`` order — strictly FIFO
+        when every request shares one class (already-copied chunks of a
+        job a later, more urgent submission overtakes stay staged on
+        device, so no work is lost).  Returns the names turned ready."""
         finished: List[str] = []
         budget = chunk_budget
         while True:
-            job = next((j for j in self._jobs.values()
-                        if j.status == "promoting"), None)
+            promoting = [j for j in self._jobs.values()
+                         if j.status == "promoting"]
+            job = (min(promoting, key=lambda j: (j.priority, j.seq))
+                   if promoting else None)
             if job is None or (budget is not None and budget <= 0):
                 break
             n = job.remaining if budget is None else min(job.remaining, budget)

@@ -1,4 +1,6 @@
-"""Scheduler unit tests: FIFO admission, per-slot termination, refill."""
+"""Scheduler unit tests: FIFO admission, per-slot termination, refill,
+priority classes, anti-starvation aging, and preempt/resume bookkeeping
+(hypothesis property tests live in test_scheduler_properties.py)."""
 
 import numpy as np
 import pytest
@@ -120,3 +122,109 @@ def test_referenced_prefixes_spans_all_stages():
     # admit seats the first queued request ("queued" enters a slot)
     s.admit()
     assert s.referenced_prefixes() == {"waiting", "queued", "running"}
+
+
+# ---------------------------------------------------------------------------
+# Priority classes, aging, preemption
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    """Settable clock: ``clk.t = ...`` is the whole API."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_priority_admission_order():
+    """Lower class admits first; a single class stays plain FIFO."""
+    s = Scheduler(3)
+    low, urgent, mid = _req(priority=2), _req(priority=0), _req(priority=1)
+    for r in (low, urgent, mid):
+        s.submit(r)
+    assert [r.uid for _, r in s.admit()] == [urgent.uid, mid.uid, low.uid]
+
+
+def test_fifo_within_priority_class():
+    s = Scheduler(2)
+    a, b = _req(priority=1), _req(priority=1)
+    s.submit(a), s.submit(b)
+    assert [r.uid for _, r in s.admit()] == [a.uid, b.uid]
+    assert s.best_queued() is None
+
+
+def test_aging_promotes_long_waiting_request():
+    """After waiting 2 x aging_interval, a class-2 request outranks a
+    freshly arrived class-1 request — starvation is bounded."""
+    clk = FakeClock()
+    s = Scheduler(1, clock=clk, aging_interval_s=1.0)
+    old_low = _req(priority=2)
+    s.submit(old_low)
+    assert s.effective_class(old_low) == 2
+    clk.t = 2.5
+    fresh_mid = _req(priority=1)
+    s.submit(fresh_mid)
+    assert s.effective_class(old_low) == 0  # aged two classes
+    assert s.effective_class(fresh_mid) == 1
+    assert [r.uid for _, r in s.admit()] == [old_low.uid]
+
+
+def test_aging_disabled_without_interval():
+    clk = FakeClock()
+    s = Scheduler(1, clock=clk)
+    r = _req(priority=3)
+    s.submit(r)
+    clk.t = 1e9
+    assert s.effective_class(r) == 3
+    with pytest.raises(ValueError):
+        Scheduler(1, aging_interval_s=0.0)
+
+
+def test_preempt_resume_bookkeeping():
+    """Preemption stashes the emitted tokens and requeues at the original
+    arrival position; re-admission restores the stash and the budget
+    keeps counting against the original max_new."""
+    s = Scheduler(1)
+    a = _req(max_new=5, priority=1)
+    s.submit(a)
+    s.admit()
+    s.record_token(0, 11), s.record_token(0, 12)
+    b = _req(max_new=1, priority=0)
+    s.submit(b)
+    assert s.best_queued().uid == b.uid  # class 0 outranks the runner
+    victim = s.preempt(0)
+    assert victim.uid == a.uid and s.preemptions == 1
+    assert s.free_slots() == [0]
+    assert s.resume_len(a.uid) == 2
+    # the urgent request runs first; the victim waits at its arrival slot
+    assert [r.uid for _, r in s.admit()] == [b.uid]
+    s.record_token(0, 99)
+    s.finish(0)
+    [(slot, r)] = s.admit()
+    assert r.uid == a.uid
+    np.testing.assert_array_equal(s.emitted_tokens(slot), [11, 12])
+    assert s.resume_len(a.uid) == 0  # stash consumed on re-admission
+    assert s.record_token(slot, 13) is False
+    assert s.record_token(slot, 14) is False
+    assert s.record_token(slot, 15) is True  # 5 tokens total, not 5 more
+    _, toks = s.finish(slot)
+    np.testing.assert_array_equal(toks, [11, 12, 13, 14, 15])
+
+
+def test_preempted_request_keeps_arrival_order():
+    """A preempted request re-enters *ahead* of same-class requests that
+    arrived after it — eviction does not cost it its queue position."""
+    s = Scheduler(1)
+    first, later = _req(max_new=4), _req(max_new=4)
+    s.submit(first)
+    s.admit()
+    s.record_token(0, 1)
+    s.submit(later)
+    s.preempt(0)
+    assert [r.uid for r in s._queue] == [first.uid, later.uid]
+    [(slot, r)] = s.admit()
+    assert r.uid == first.uid
+    np.testing.assert_array_equal(s.emitted_tokens(slot), [1])

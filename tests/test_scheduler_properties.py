@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) for the priority scheduler: aging
+bounds starvation, FIFO holds within a priority class under arbitrary
+admit interleavings, and preempt/resume conserves every emitted token
+across randomized submit/admit/record/preempt sequences."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.scheduler import Request, Scheduler
+
+SHORT = settings(max_examples=100, deadline=None)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _req(**kw):
+    kw.setdefault("max_new", 3)
+    return Request(tokens=np.arange(3, dtype=np.int32), **kw)
+
+
+@SHORT
+@given(priority=st.integers(0, 8),
+       interval=st.floats(0.01, 10.0),
+       extra=st.floats(0.0, 100.0))
+def test_aging_bounds_starvation(priority, interval, extra):
+    """Waiting ``priority * interval`` seconds always ages a request to
+    class 0 — no base class can be starved longer than that by urgent
+    arrivals.  Aging is also monotone: waiting never raises the class."""
+    clk = FakeClock()
+    s = Scheduler(1, clock=clk, aging_interval_s=interval)
+    r = _req(priority=priority)
+    s.submit(r)
+    before = s.effective_class(r)
+    clk.t = priority * interval + extra
+    after = s.effective_class(r)
+    assert after == 0
+    assert after <= before <= priority
+
+
+@SHORT
+@given(data=st.data())
+def test_fifo_within_class_any_interleaving(data):
+    """Whatever the admit/finish interleaving and the class mix, two
+    requests of the *same* class are always admitted in submission
+    order (uids are monotone in submission order here)."""
+    s = Scheduler(data.draw(st.integers(1, 4), label="slots"))
+    n = data.draw(st.integers(1, 16), label="requests")
+    cls_of, admitted = {}, []
+
+    def drain_admits():
+        for slot, req in s.admit():
+            admitted.append(req.uid)
+            s.record_token(slot, 1)  # max_new=1: finish immediately
+            s.finish(slot)
+
+    for i in range(n):
+        r = _req(max_new=1, priority=data.draw(st.integers(0, 2),
+                                               label=f"class[{i}]"))
+        cls_of[r.uid] = r.priority
+        s.submit(r)
+        if data.draw(st.booleans(), label=f"admit after {i}?"):
+            drain_admits()
+    while s.pending:
+        drain_admits()
+    assert len(admitted) == n
+    for c in (0, 1, 2):
+        same_class = [u for u in admitted if cls_of[u] == c]
+        assert same_class == sorted(same_class)
+
+
+@SHORT
+@given(data=st.data())
+def test_preempt_resume_conserves_tokens(data):
+    """Random submit/admit/record/preempt traffic: every request finishes
+    exactly once with exactly the tokens recorded for it, in order —
+    preemption and resumption never lose, duplicate or reorder a token,
+    and a resumed slot always starts from the stashed emission."""
+    s = Scheduler(2)
+    reqs = [_req(max_new=4, priority=data.draw(st.integers(0, 2),
+                                               label=f"class[{i}]"))
+            for i in range(data.draw(st.integers(1, 6), label="requests"))]
+    for r in reqs:
+        s.submit(r)
+    emitted_ref = {r.uid: [] for r in reqs}
+    finished = {}
+    tok = itertools.count(100)
+
+    def step_active():
+        for slot in list(s.active_slots()):
+            t = next(tok)
+            emitted_ref[s.request_in(slot).uid].append(t)
+            if s.record_token(slot, t):
+                req, out = s.finish(slot)
+                assert req.uid not in finished
+                finished[req.uid] = list(out)
+
+    for _ in range(data.draw(st.integers(0, 40), label="ops")):
+        op = data.draw(st.sampled_from(["admit", "step", "preempt"]))
+        if op == "admit":
+            for slot, req in s.admit():
+                # a resumed slot starts exactly from its stash
+                assert list(s.emitted_tokens(slot)) == emitted_ref[req.uid]
+        elif op == "step":
+            step_active()
+        elif s.active_slots():
+            s.preempt(data.draw(st.sampled_from(s.active_slots())))
+    while s.has_work():  # drain: admit + one decode step makes progress
+        s.admit()
+        step_active()
+    assert set(finished) == {r.uid for r in reqs}
+    for r in reqs:
+        assert finished[r.uid] == emitted_ref[r.uid]
+        assert len(finished[r.uid]) == r.max_new

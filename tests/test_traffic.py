@@ -1,0 +1,347 @@
+"""Deterministic serving-traffic harness tests: seeded trace
+reproducibility, hand-computed SLO arithmetic, full-simulation
+determinism under the virtual clock with the tiers and the online
+compiler churning, token-identity of every request against an offline
+single-request run, token-exact preempt/resume (dense + paged, jnp +
+pallas-interpret), fake-clock timing regression, and the ``stats()``
+schema snapshot."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import memcom
+from repro.data import SyntheticVocab
+from repro.models import transformer as tfm
+from repro.serving import (
+    Request,
+    ServingEngine,
+    TrafficConfig,
+    VirtualClock,
+    generate_trace,
+    materialize_prefix,
+    slo_metrics,
+)
+from repro.serving.clock import DEFAULT_COSTS
+from repro.serving.traffic import zipf_weights
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    return cfg, params, mc
+
+
+#: the churn scenario every simulation test uses: catalog (5 tasks)
+#: exceeds prefix_capacity (2) and host_capacity (2), so demote/spill/
+#: promote and online compiles all fire; two priority classes at a rate
+#: hot enough to queue, so preemption pressure exists too
+CHURN = TrafficConfig(num_tasks=5, num_requests=12, context_tokens=24,
+                      rate_rps=300.0, priority_classes=2)
+
+
+def _churn_engine(cfg, params, mc, disk_dir, **kw):
+    m = cfg.memcom.num_memory_tokens
+    base = dict(slots=2, max_len=m + 32, compressor=mc,
+                compile_token_budget=8, prefix_capacity=2,
+                host_capacity=2, disk_dir=str(disk_dir),
+                promote_layer_budget=1, clock=VirtualClock(),
+                priority_aging_s=0.05)
+    base.update(kw)
+    return ServingEngine(cfg, params, **base)
+
+
+def _simulate(cfg, params, mc, disk_dir, seed=0):
+    """One full churn simulation; returns (slo metrics, stats, tokens
+    in trace order)."""
+    trace = generate_trace(CHURN, seed)
+    eng = _churn_engine(cfg, params, mc, disk_dir)
+    out = eng.serve(list(trace.requests))
+    metrics = slo_metrics(eng.request_log, slo_ttft_s=0.02,
+                          gap_samples=eng.gap_samples)
+    tokens = [list(out[r.uid]) for r in trace.requests]
+    return metrics, eng.stats(), tokens
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+
+def _trace_fingerprint(trace):
+    return [(r.arrival_s, r.tokens.tobytes(), r.max_new, r.priority,
+             r.raw_shots.tobytes()) for r in trace.requests]
+
+
+@pytest.mark.parametrize("process", ["poisson", "onoff"])
+def test_trace_reproducible(process):
+    """Same (config, seed) -> byte-identical trace; a different seed
+    moves it."""
+    cfg = TrafficConfig(num_tasks=4, num_requests=20, context_tokens=16,
+                        process=process, priority_classes=2)
+    a, b = generate_trace(cfg, 7), generate_trace(cfg, 7)
+    assert _trace_fingerprint(a) == _trace_fingerprint(b)
+    assert a.task_ids == b.task_ids
+    c = generate_trace(cfg, 8)
+    assert _trace_fingerprint(a) != _trace_fingerprint(c)
+
+
+def test_arrivals_sorted_and_positive():
+    for process in ("poisson", "onoff"):
+        cfg = TrafficConfig(num_tasks=2, num_requests=30, context_tokens=16,
+                            process=process)
+        ts = [r.arrival_s for r in generate_trace(cfg, 1).requests]
+        assert len(ts) == 30
+        assert all(t > 0 for t in ts)
+        assert ts == sorted(ts)
+
+
+def test_zipf_popularity_skew():
+    w = zipf_weights(8, 1.2)
+    assert math.isclose(float(w.sum()), 1.0)
+    assert all(w[i] > w[i + 1] for i in range(7))  # rank 0 is the head
+    cfg = TrafficConfig(num_tasks=8, num_requests=200, context_tokens=16,
+                        zipf_alpha=1.2)
+    ids = generate_trace(cfg, 3).task_ids
+    counts = np.bincount(ids, minlength=8)
+    assert counts[0] == counts.max()  # the head actually dominates
+    assert len(set(ids)) > 1          # and the tail exists
+
+
+def test_catalog_tasks_distinct():
+    cfg = TrafficConfig(num_tasks=6, num_requests=1, context_tokens=16)
+    cat = generate_trace(cfg, 0).catalog
+    assert len({c.tobytes() for c in cat}) == 6
+
+
+def test_traffic_config_validation():
+    with pytest.raises(ValueError):
+        TrafficConfig(process="uniform")
+    with pytest.raises(ValueError):
+        TrafficConfig(rate_rps=0.0)
+    with pytest.raises(ValueError):
+        TrafficConfig(priority_classes=2, priority_weights=(1.0,))
+
+
+# ---------------------------------------------------------------------------
+# SLO arithmetic (hand-computed micro-trace)
+# ---------------------------------------------------------------------------
+
+
+def test_slo_metrics_hand_computed():
+    """Three completed requests + one in flight, checked against the
+    documented percentile formula (index = (n-1)*q/100, linear
+    interpolation) and goodput/throughput by hand."""
+    log = {
+        1: {"priority": 0, "arrival_s": 0.0, "first_token_s": 0.01,
+            "finish_s": 0.02, "tokens": 2, "preemptions": 0},
+        2: {"priority": 0, "arrival_s": 0.1, "first_token_s": 0.15,
+            "finish_s": 0.20, "tokens": 3, "preemptions": 1},
+        3: {"priority": 1, "arrival_s": 0.2, "first_token_s": 0.30,
+            "finish_s": 0.40, "tokens": 4, "preemptions": 0},
+        4: {"priority": 1, "arrival_s": 0.3, "first_token_s": None,
+            "finish_s": None, "tokens": 0, "preemptions": 0},
+    }
+    m = slo_metrics(log, slo_ttft_s=0.05, devices=2,
+                    gap_samples=[0.001, 0.002, 0.003])
+    assert m["requests"] == 4 and m["completed"] == 3
+    # ttfts sorted: [0.01, 0.05, 0.10]; p50 = middle, p99 interpolates
+    # between index 1.98's neighbours: 0.05 + 0.98 * (0.10 - 0.05)
+    assert math.isclose(m["ttft_p50_s"], 0.05)
+    assert math.isclose(m["ttft_p99_s"], 0.05 + 0.98 * 0.05)
+    # latencies sorted: [0.02, 0.10, 0.20]
+    assert math.isclose(m["latency_p50_s"], 0.10)
+    # makespan: first arrival 0.0 -> last finish 0.4
+    assert math.isclose(m["duration_s"], 0.4)
+    # TTFTs 0.01 and 0.05 meet the 0.05 SLO; 0.10 misses
+    assert m["slo_attained"] == 2
+    assert math.isclose(m["goodput_rps"], 2 / 0.4)
+    assert math.isclose(m["offered_rps"], 4 / 0.4)
+    assert m["tokens_generated"] == 9
+    assert math.isclose(m["tokens_per_s_per_device"], 9 / 0.4 / 2)
+    # gap p99 interpolates [0.001, 0.002, 0.003] at index 1.98
+    assert math.isclose(m["decode_gap_p99_s"], 0.002 + 0.98 * 0.001)
+    assert m["preemptions"] == 1
+    c0, c1 = m["per_class"]["0"], m["per_class"]["1"]
+    assert c0["requests"] == 2 and c0["completed"] == 2
+    assert c0["slo_attained"] == 2 and c0["preemptions"] == 1
+    assert c1["requests"] == 2 and c1["completed"] == 1
+    assert c1["slo_attained"] == 0
+
+
+def test_slo_metrics_empty_log():
+    m = slo_metrics({}, slo_ttft_s=0.1)
+    assert m["requests"] == 0 and m["completed"] == 0
+    assert m["goodput_rps"] == 0.0 and m["ttft_p99_s"] == 0.0
+    assert m["per_class"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Full-simulation determinism + churn
+# ---------------------------------------------------------------------------
+
+
+def test_simulation_deterministic_with_churn(setup, tmp_path):
+    """Two same-seed runs (fresh engines, clocks and disk dirs) produce
+    byte-identical SLO JSON and identical per-request tokens — while the
+    scenario actually churns: online compiles, tier demotions and
+    preemptions all fire.  A stale disk dir would break this (run 2
+    would promote run 1's shards instead of compiling), which is why
+    every run gets its own directory."""
+    m1, s1, t1 = _simulate(*setup, tmp_path / "a")
+    m2, s2, t2 = _simulate(*setup, tmp_path / "b")
+    assert json.dumps(m1, sort_keys=True) == json.dumps(m2, sort_keys=True)
+    assert t1 == t2
+    assert s1["engine"] == s2["engine"]
+    assert s1["compiler"]["jobs"] > 0          # online compiles fired
+    assert s1["prefix_tiers"]["demotes"] > 0   # tier churn fired
+    assert m1["completed"] == m1["requests"] == CHURN.num_requests
+    assert m1["preemptions"] > 0               # priority pressure fired
+
+
+def test_different_seed_changes_simulation(setup, tmp_path):
+    m1, _, _ = _simulate(*setup, tmp_path / "a", seed=0)
+    m2, _, _ = _simulate(*setup, tmp_path / "b", seed=1)
+    assert json.dumps(m1, sort_keys=True) != json.dumps(m2, sort_keys=True)
+
+
+def test_churn_tokens_match_offline_reference(setup, tmp_path):
+    """Every request served under load (queueing, preemption, tier
+    churn, budget-chunked compiles) emits exactly the tokens an offline
+    engine produces serving it alone against an unbounded store: the
+    scheduling machinery moves *when* work happens, never *what* comes
+    out."""
+    cfg, params, mc = setup
+    _, _, tokens = _simulate(cfg, params, mc, tmp_path / "sim")
+    trace = generate_trace(CHURN, 0)
+
+    m = cfg.memcom.num_memory_tokens
+    ref = ServingEngine(cfg, params, slots=1, max_len=m + 32,
+                        compressor=mc)  # unbounded store, no tiers
+    for i, r in enumerate(trace.requests):
+        solo = Request(tokens=r.tokens, max_new=r.max_new,
+                       raw_shots=r.raw_shots)
+        out = ref.serve([solo])
+        assert tokens[i] == list(out[solo.uid]), f"request {i} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Preempt/resume token-exactness (dense + paged, jnp + pallas-interpret)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_preempt_resume_token_exact(setup, rng, layout, impl):
+    """A long decode preempted mid-stream by an urgent request and
+    resumed later emits exactly the tokens of an uncontended run — the
+    resume re-prefills prompt+emitted, so greedy decode continues from
+    the identical state."""
+    cfg, params, mc = setup
+    m = cfg.memcom.num_memory_tokens
+    shots = rng.integers(4, cfg.vocab_size, 24).astype(np.int32)
+    prompt = rng.integers(4, cfg.vocab_size, 5).astype(np.int32)
+    prefix, _ = memcom.compress(mc, cfg, np.asarray(shots)[None])
+    kv = materialize_prefix(params, cfg, prefix)
+
+    def build():
+        eng = ServingEngine(cfg, params, slots=1, max_len=m + 32,
+                            kv_layout=layout, impl=impl,
+                            clock=VirtualClock())
+        eng.add_prefix("task", kv)
+        return eng
+
+    solo = build()
+    ref = solo.serve([Request(tokens=prompt, max_new=10, prefix="task")])
+    ref = list(next(iter(ref.values())))
+
+    eng = build()
+    long = Request(tokens=prompt, max_new=10, prefix="task",
+                   priority=1, arrival_s=0.0)
+    urgent = Request(tokens=prompt[:3], max_new=2, prefix="task",
+                     priority=0, arrival_s=0.004)
+    out = eng.serve([long, urgent])
+    es = eng.stats()["engine"]
+    assert es["preemptions"] == 1
+    assert es["preempted_tokens_refilled"] > 0
+    assert list(out[long.uid]) == ref
+
+
+# ---------------------------------------------------------------------------
+# Fake-clock timing determinism (the perf_counter testability fix)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_timing_deterministic_under_fake_clock(setup, tmp_path):
+    """``decode_time_s`` and the gap fields come from the injected
+    clock, not ``time.perf_counter()``: under a VirtualClock they are
+    exact functions of the cost model, identical across runs."""
+    cfg, params, mc = setup
+
+    def run(sub):
+        eng = _churn_engine(cfg, params, mc, tmp_path / sub)
+        eng.serve(list(generate_trace(CHURN, 0).requests))
+        return eng.stats()["engine"], eng.gap_samples
+
+    e1, g1 = run("a")
+    e2, g2 = run("b")
+    assert e1 == e2
+    assert g1 == g2
+    # decode time is exactly decode_steps x the decode-step charge
+    assert math.isclose(e1["decode_time_s"],
+                        e1["decode_steps"] * DEFAULT_COSTS["decode_step"])
+    assert e1["decode_gap_p99_s"] == float(np.percentile(g1, 99))
+
+
+# ---------------------------------------------------------------------------
+# stats() schema snapshot
+# ---------------------------------------------------------------------------
+
+GOLDEN_ENGINE_KEYS = sorted([
+    "prefills", "decode_steps", "tokens_generated",
+    "decode_steps_during_compile", "compile_chunks_interleaved",
+    "decode_steps_during_promote", "promote_steps_interleaved",
+    "decode_gap_max_s", "decode_gap_sum_s", "decode_gaps",
+    "decode_time_s", "decode_gap_p50_s", "decode_gap_p99_s",
+    "preemptions", "preempted_tokens_refilled",
+    "autotune_shrinks", "autotune_grows",
+])
+GOLDEN_TIER_KEYS = sorted([
+    "hbm_hits", "host_promotes", "disk_loads", "demotes", "spills",
+    "promote_bytes", "promote_chunks", "host_drops", "hbm_resident",
+    "host_resident", "disk_resident", "promotions_in_flight",
+])
+GOLDEN_BUDGET_KEYS = sorted([
+    "compile_token_budget", "promote_layer_budget", "autotune",
+])
+GOLDEN_POOL_KEYS = sorted([
+    "num_blocks", "block_size", "blocks_used", "blocks_free",
+])
+
+
+def test_stats_schema_golden(setup, tmp_path):
+    """The full ``stats()`` surface for a paged+tiered+compiling engine.
+    A key rename or removal here breaks the serving bench, the traffic
+    harness and the launcher's ``--stats`` consumers — this snapshot
+    makes that an explicit decision instead of a silent drift."""
+    cfg, params, mc = setup
+    eng = _churn_engine(cfg, params, mc, tmp_path, kv_layout="paged")
+    eng.serve(list(generate_trace(CHURN, 0).requests))
+    s = eng.stats()
+    assert sorted(s.keys()) == ["budgets", "compiler", "engine", "pool",
+                                "prefix_store", "prefix_tiers"]
+    assert sorted(s["engine"].keys()) == GOLDEN_ENGINE_KEYS
+    assert sorted(s["prefix_store"].keys()) == sorted(
+        ["hits", "misses", "puts", "evictions"])
+    assert sorted(s["compiler"].keys()) == sorted(
+        ["jobs", "deduped", "chunks", "tokens", "compiled"])
+    assert sorted(s["budgets"].keys()) == GOLDEN_BUDGET_KEYS
+    assert sorted(s["prefix_tiers"].keys()) == GOLDEN_TIER_KEYS
+    assert sorted(s["pool"].keys()) == GOLDEN_POOL_KEYS
+    # every counter JSON-serializes (the bench writes stats verbatim)
+    json.dumps(s)
