@@ -580,7 +580,8 @@ class ServingEngine:
                         "even with every free slot reclaimed — grow "
                         "num_blocks or evict resident prefixes")
             if self.preemption and sched.pending:
-                admitted += self._preempt_for_priority(sched, can_seat)
+                admitted += self._preempt_for_priority(
+                    sched, can_seat, protected={s for s, _ in admitted})
             for slot, req in admitted:
                 if req.prefix is not None:
                     # skip the re-seat when the slot provably still holds
@@ -708,7 +709,8 @@ class ServingEngine:
                 self._autotune_step()
         return results
 
-    def _preempt_for_priority(self, sched: Scheduler, can_seat):
+    def _preempt_for_priority(self, sched: Scheduler, can_seat,
+                              protected=frozenset()):
         """Evict at most one running slot when the best queued request's
         class strictly outranks it (base classes — aging never triggers
         preemption) and admission left it stuck.  The victim is the worst
@@ -716,14 +718,18 @@ class ServingEngine:
         highest slot); its paged blocks are released (the prefix itself
         stays store-resident and demotes through the normal tier path
         under capacity pressure) and the scheduler stashes its emitted
-        tokens for a token-exact resume.  Returns the (slot, request)
-        pairs the retried admission seated.  One victim per loop
-        iteration bounds preemption thrash."""
+        tokens for a token-exact resume.  Slots in ``protected`` — seated
+        by this loop iteration's admit() but not yet prefilled, so the
+        caller still holds (slot, request) pairs for them — are never
+        picked as victims.  Returns the (slot, request) pairs the retried
+        admission seated.  One victim per loop iteration bounds
+        preemption thrash."""
         cand = sched.best_queued()
         if cand is None:
             return []
         victims = [s for s in sched.active_slots()
-                   if sched.request_in(s).priority > cand.priority]
+                   if s not in protected
+                   and sched.request_in(s).priority > cand.priority]
         if not victims:
             return []
         victim = max(victims, key=lambda s: (sched.request_in(s).priority,
@@ -778,10 +784,12 @@ class ServingEngine:
         elif mean_gap < self.target_decode_gap_s / 2:
             changed = False
             if init_c is not None and self.compile_token_budget < init_c * 8:
-                self.compile_token_budget = self.compile_token_budget * 2
+                self.compile_token_budget = min(
+                    self.compile_token_budget * 2, init_c * 8)
                 changed = True
             if init_p is not None and self.promote_layer_budget < init_p * 8:
-                self.promote_layer_budget = self.promote_layer_budget * 2
+                self.promote_layer_budget = min(
+                    self.promote_layer_budget * 2, init_p * 8)
                 changed = True
             if changed:
                 self._counters["autotune_grows"] += 1

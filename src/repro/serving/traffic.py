@@ -234,7 +234,9 @@ def slo_metrics(request_log: Dict[int, dict], *, slo_ttft_s: float,
         t1 = max(e["finish_s"] for e in done)
         duration = max(t1 - t0, 1e-9)
     else:
-        duration = 1e-9
+        # no completions → no makespan: report zero rates rather than
+        # dividing by a sentinel and emitting astronomical figures
+        duration = 0.0
     tokens = sum(e["tokens"] for e in done)
     attained = sum(1 for t in ttfts if t <= slo_ttft_s)
     out = {
@@ -247,10 +249,11 @@ def slo_metrics(request_log: Dict[int, dict], *, slo_ttft_s: float,
         "latency_p99_s": _pct(lats, 99),
         "slo_ttft_s": float(slo_ttft_s),
         "slo_attained": int(attained),
-        "goodput_rps": float(attained / duration),
-        "offered_rps": float(len(entries) / duration),
+        "goodput_rps": float(attained / duration) if duration else 0.0,
+        "offered_rps": float(len(entries) / duration) if duration else 0.0,
         "tokens_generated": int(tokens),
-        "tokens_per_s_per_device": float(tokens / duration / max(devices, 1)),
+        "tokens_per_s_per_device": (
+            float(tokens / duration / max(devices, 1)) if duration else 0.0),
         "decode_gap_p99_s": _pct(list(gap_samples), 99),
         "preemptions": int(sum(e["preemptions"] for e in entries)),
     }

@@ -26,6 +26,7 @@ from repro.serving import (
     slo_metrics,
 )
 from repro.serving.clock import DEFAULT_COSTS
+from repro.serving.scheduler import Scheduler
 from repro.serving.traffic import zipf_weights
 
 
@@ -181,6 +182,19 @@ def test_slo_metrics_empty_log():
     assert m["per_class"] == {}
 
 
+def test_slo_metrics_no_completions_reports_zero_rates():
+    """In-flight requests but zero completions: there is no makespan, so
+    the rates must read 0.0 — not the astronomical figures a sentinel
+    divisor would produce in serving_bench.json."""
+    log = {1: {"priority": 0, "arrival_s": 0.0, "first_token_s": None,
+               "finish_s": None, "tokens": 0, "preemptions": 0}}
+    m = slo_metrics(log, slo_ttft_s=0.1)
+    assert m["requests"] == 1 and m["completed"] == 0
+    assert m["duration_s"] == 0.0
+    assert m["offered_rps"] == 0.0 and m["goodput_rps"] == 0.0
+    assert m["tokens_per_s_per_device"] == 0.0
+
+
 # ---------------------------------------------------------------------------
 # Full-simulation determinism + churn
 # ---------------------------------------------------------------------------
@@ -270,6 +284,59 @@ def test_preempt_resume_token_exact(setup, rng, layout, impl):
     assert es["preemptions"] == 1
     assert es["preempted_tokens_refilled"] > 0
     assert list(out[long.uid]) == ref
+
+
+def test_preemption_never_evicts_just_admitted_slot(setup):
+    """Regression: serve() runs the priority-preemption check *after*
+    admit() in the same loop iteration, while it still holds that
+    admit's (slot, request) pairs un-prefilled.  With aging enabled a
+    base-class-1 request can win admission over a pending class-0 one
+    and immediately qualify as a victim (preemption compares base
+    classes) — evicting it there would strand a stale pair that serve()
+    then prefills into a slot the scheduler has re-assigned.  The
+    just-admitted slots are therefore passed as ``protected`` and must
+    never be picked."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    clock = VirtualClock()
+    eng = ServingEngine(cfg, params, slots=1, max_len=m + 32, clock=clock,
+                        priority_aging_s=0.005)
+    sched = Scheduler(1, clock=clock, aging_interval_s=0.005)
+    low = Request(tokens=np.array([5, 6], np.int32), max_new=4, priority=1)
+    sched.submit(low)
+    clock.advance(0.01)  # low ages to effective class 0
+    hi = Request(tokens=np.array([7], np.int32), max_new=2, priority=0)
+    sched.submit(hi)
+    [(slot, seated)] = sched.admit()
+    assert seated is low  # aged + earlier arrival: wins admission over hi
+    # the serve loop protects the batch it just admitted: no victim
+    assert eng._preempt_for_priority(sched, None, protected={slot}) == []
+    assert sched.request_in(slot) is low
+    assert sched.preemptions == 0 and eng.stats()["engine"]["preemptions"] == 0
+    # a later iteration (nothing freshly admitted) may preempt it
+    eng.request_log[low.uid] = {"preemptions": 0}
+    eng._preempt_for_priority(sched, None)
+    assert sched.preemptions == 1
+
+
+def test_autotune_grow_caps_at_8x_configured(setup):
+    """The grow path clamps each budget to 8x its *configured* value —
+    after shrinks land a budget off the power-of-two ladder, plain
+    doubling would overshoot to just under 16x (e.g. configured 5:
+    2 -> 4 -> 8 -> 16 -> 32 -> 64 = 12.8x)."""
+    cfg, params, _ = setup
+    m = cfg.memcom.num_memory_tokens
+    eng = ServingEngine(cfg, params, slots=1, max_len=m + 32,
+                        clock=VirtualClock(), autotune_budgets=True,
+                        target_decode_gap_s=1.0, compile_token_budget=5,
+                        promote_layer_budget=3, autotune_interval=1)
+    # as if earlier overshoot windows had shrunk both budgets
+    eng.compile_token_budget, eng.promote_layer_budget = 2, 1
+    for _ in range(10):
+        eng._gap_window[:] = [0.0]  # deep undershoot -> grow
+        eng._autotune_step()
+    assert eng.compile_token_budget == 5 * 8
+    assert eng.promote_layer_budget == 3 * 8
 
 
 # ---------------------------------------------------------------------------
