@@ -251,7 +251,7 @@ def decode_attention_lengths(
 # ---------------------------------------------------------------------------
 
 
-def paged_scatter(pool, new, block_tables, starts):
+def paged_scatter(pool, new, block_tables, starts, valid=None):
     """Write ``new[b, s]`` into the block pool at logical cache position
     ``starts[b] + s`` of slot ``b``.
 
@@ -261,11 +261,26 @@ def paged_scatter(pool, new, block_tables, starts):
     ``starts`` ``(B,)`` int32.  Positions are translated token-wise
     (``block = table[b, pos // bs]``, ``offset = pos % bs``) so a write may
     straddle physical blocks that are not adjacent in the pool.
-    """
+
+    ``valid`` (B,) int32 (optional) is the ragged-lane mask for the fused
+    serving step: only lanes ``s < valid[b]`` carry real tokens, the rest
+    are geometry padding (speculative lanes past a slot's budget, chunk
+    lanes of other slots).  Invalid lanes are routed to physical block 0 —
+    the allocator's reserved trash block — so they can never corrupt an
+    allocated block.  The table column is also clamped: an invalid lane's
+    ``pos // bs`` may exceed the table width, and take_along_axis's clamp
+    semantics would otherwise read the *last* column (a real block for a
+    full slot)."""
     bs = pool.shape[1]
     B, S = new.shape[:2]
     pos = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B,S)
-    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)  # (B,S)
+    col = pos // bs
+    if valid is not None:
+        col = jnp.clip(col, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, col, axis=1)  # (B,S)
+    if valid is not None:
+        lane = jnp.arange(S, dtype=jnp.int32)[None, :]
+        blk = jnp.where(lane < valid[:, None], blk, 0)  # 0 == trash block
     return pool.at[blk, pos % bs].set(new.astype(pool.dtype))
 
 

@@ -335,6 +335,8 @@ def ssd(x, dt, A, Bm, Cm, *, init_state=None, chunk=256, impl="auto"):
 ssd_decode_step = jnp_impl.ssd_decode_step
 
 # paged-cache primitives (pure jnp, re-exported so model code depends on
-# ops alone and the pallas kernel module stays a lazy import)
+# ops alone and the pallas kernel module stays a lazy import).
+# paged_scatter(valid=) is the fused serving step's ragged-lane contract:
+# lanes >= valid[b] are geometry padding and land in the trash block.
 paged_scatter = jnp_impl.paged_scatter
 paged_gather = jnp_impl.paged_gather

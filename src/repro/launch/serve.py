@@ -53,6 +53,13 @@ the TTFT SLO the goodput line reports against, and
 ``--autotune-budgets`` lets the engine trade compile/promote budgets
 against the observed decode gap.  Same seed, same numbers, any host.
 
+``--fused-step`` folds admission prefills (in ``--fused-chunk-tokens``
+pieces) and online compile chunks into the batched decode dispatch, so
+churn never opens a decode gap; ``--spec-draft smollm-135m --spec-k 2``
+adds speculative decoding on the same fused lanes (a small drafter — or
+``self`` — proposes k tokens per slot, verified in one step; greedy
+output is token-identical to the non-speculative engine).
+
 ``--mesh M`` (or ``--mesh DxM``) runs the whole edge stage
 tensor-parallel: target params placed from their logical axes, KV
 caches/pools split by head over the mesh "model" axis, block tables and
@@ -214,6 +221,24 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="traffic trace seed (same seed -> same workload "
                          "and, on the virtual clock, same metrics)")
+    ap.add_argument("--fused-step", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="fuse admission prefill chunks / compile chunks "
+                         "into the batched decode dispatch (pure "
+                         "attention/MLA archs): new requests join by "
+                         "streaming their prompt through the decode step "
+                         "instead of opening a prefill-sized decode gap")
+    ap.add_argument("--fused-chunk-tokens", type=int, default=16,
+                    help="prompt tokens a joining slot streams per fused "
+                         "step (--fused-step)")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH|self",
+                    help="speculative decoding drafter: an arch id (its "
+                         "smoke config drafts for the target) or 'self' "
+                         "(the target drafts for itself — the acceptance "
+                         "upper bound).  Needs --fused-step and --spec-k")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens proposed and verified per fused "
+                         "step and slot (0 = speculative decoding off)")
     ap.add_argument("--mesh", default=None,
                     help="serve tensor-parallel: M (model-parallel ways) or "
                          "DxM (data x model); forces the host device count "
@@ -244,6 +269,15 @@ def main():
             args.compile_budget is None and args.promote_budget is None:
         ap.error("--autotune-budgets needs --compile-budget and/or "
                  "--promote-budget to tune")
+    if (args.spec_k > 0) != (args.spec_draft is not None):
+        ap.error("--spec-draft and --spec-k come together (both or neither)")
+    if args.spec_k and not args.fused_step:
+        ap.error("--spec-k rides the fused step: add --fused-step")
+    if args.fused_chunk_tokens < 1:
+        ap.error("--fused-chunk-tokens must be >= 1")
+    if args.spec_draft is not None and args.spec_draft != "self" \
+            and args.spec_draft not in ARCH_IDS:
+        ap.error(f"--spec-draft must be 'self' or one of {ARCH_IDS}")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -273,6 +307,18 @@ def main():
         rules = {"baseline": BASELINE_RULES, "fsdp": FSDP_RULES}[args.rules]
         print(f"[edge] tensor-parallel mesh {data}x{model} "
               f"(data x model), rules={args.rules}")
+    spec_draft = None
+    if args.spec_k:
+        if args.spec_draft == "self":
+            spec_draft = "self"
+            print(f"[edge] self-speculative decoding, k={args.spec_k}")
+        else:
+            dcfg = (get_smoke_config(args.spec_draft) if args.smoke
+                    else get_config(args.spec_draft)).replace(
+                        vocab_size=vocab.size)
+            spec_draft = (dcfg, tfm.init_params(dcfg, 1))
+            print(f"[edge] speculative decoding: drafter {dcfg.name} "
+                  f"({dcfg.param_count()/1e6:.1f}M), k={args.spec_k}")
     clock = None
     if args.traffic:
         # traffic replays timed arrivals against a virtual clock: time
@@ -299,6 +345,9 @@ def main():
                            target_decode_gap_s=(args.target_gap
                                                 if args.autotune_budgets
                                                 else None),
+                           fused_step=args.fused_step,
+                           fused_chunk_tokens=args.fused_chunk_tokens,
+                           spec_draft=spec_draft, spec_k=args.spec_k,
                            **paged_kw)
     if engine.tiers is not None:
         preloaded = engine.tiers.disk_names()
@@ -342,7 +391,9 @@ def main():
                "host_capacity": args.host_capacity,
                "disk_dir": args.disk_dir,
                "promote_budget": args.promote_budget,
-               "mesh": args.mesh, "rules": args.rules if args.mesh else None}
+               "mesh": args.mesh, "rules": args.rules if args.mesh else None,
+               "fused_step": args.fused_step,
+               "spec_draft": args.spec_draft, "spec_k": args.spec_k}
     if args.kv_layout == "paged":
         print(f"[edge] paged pool: {engine.alloc.num_blocks} blocks x "
               f"{engine.block_size} tokens, "
@@ -443,6 +494,17 @@ def main():
             print(f"[edge] online compile: {cs['jobs']} job(s), "
                   f"{cs['deduped']} deduped submit(s), {cs['chunks']} "
                   f"chunk(s) / {cs['tokens']} source tokens")
+        if args.fused_step:
+            es = engine.stats()["engine"]
+            line = (f"[edge] fused: {es['fused_steps']} fused step(s), "
+                    f"{es['fused_prefill_tokens']} prompt tokens streamed "
+                    f"in {es['fused_prefill_chunks']} chunk(s), "
+                    f"{es['fused_compile_chunks']} compile chunk(s) fused")
+            if args.spec_k:
+                line += (f"; speculative: {es['draft_accepted']}/"
+                         f"{es['draft_proposed']} drafts accepted "
+                         f"({es['accept_rate']:.0%})")
+            print(line)
 
     if args.stats:
         stats = engine.stats()

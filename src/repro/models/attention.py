@@ -66,14 +66,32 @@ def project_kv(p, cfg: ModelConfig, x, positions):
     return k, v
 
 
-def scatter_rows(cache, new, starts):
+def scatter_rows(cache, new, starts, valid=None):
     """Write ``new[b]`` into ``cache[b]`` at per-slot offsets ``starts[b]``
     along the sequence axis — the continuous-batching cache write, where
-    every slot sits at its own ``base_len + tokens_consumed`` position."""
-    def one(c, u, s):
-        return jax.lax.dynamic_update_slice_in_dim(
-            c, u.astype(c.dtype), s, axis=0)
-    return jax.vmap(one)(cache, new, starts)
+    every slot sits at its own ``base_len + tokens_consumed`` position.
+
+    ``valid`` (B,) int32 (optional) is the fused-step ragged-lane mask:
+    only lanes ``s < valid[b]`` are written; the rest scatter to the
+    out-of-bounds sentinel row ``max_len`` and are dropped.  The masked
+    path must NOT use ``dynamic_update_slice`` — its clamp semantics
+    would shift a window whose garbage tail crosses ``max_len`` *back*
+    over valid cache rows."""
+    if valid is None:
+        def one(c, u, s):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, u.astype(c.dtype), s, axis=0)
+        return jax.vmap(one)(cache, new, starts)
+    L = cache.shape[1]
+    S = new.shape[1]
+    pos = starts[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B,S)
+    lane = jnp.arange(S, dtype=jnp.int32)[None, :]
+    dest = jnp.where(lane < valid[:, None], pos, L)  # L = OOB -> dropped
+
+    def one(c, u, d):
+        return c.at[d].set(u.astype(c.dtype), mode="drop")
+
+    return jax.vmap(one)(cache, new, dest)
 
 
 def _prefix_kv(p, cfg: ModelConfig, prefix: dict):
@@ -100,6 +118,7 @@ def apply_attention(
     kv_source=None,
     decode: bool = False,
     block_tables=None,
+    lane_valid=None,
     mesh=None,
     impl: str = "auto",
 ):
@@ -107,6 +126,14 @@ def apply_attention(
     serving) reaches the decode kernels, which split Q/K/V by head over
     its "model" axis while per-slot lengths and block tables stay
     replicated — see :mod:`repro.sharding.serving`.
+
+    ``lane_valid`` (B,) int32 (fused serving step, per-slot decode only)
+    marks how many of the S lanes carry real tokens per slot: invalid
+    lanes' KV writes are dropped (dense) or routed to the trash block
+    (paged).  The attention *read* needs no masking — ``lengths =
+    cache_index + S`` puts lane ``s`` at query position ``cache_index +
+    s``, and causality already hides every cache row an invalid lane
+    could have written.
 
     With ``block_tables`` (B, nb) the cache entries are *paged*: ``k``/``v``
     are shared ``(num_blocks, block_size, Hkv, hd)`` pools and slot ``b``'s
@@ -150,9 +177,9 @@ def apply_attention(
             # every slot seated on the task but stored once)
             assert jnp.ndim(cache_index) == 1, "paged decode needs (slots,) lengths"
             k_pool = ops.paged_scatter(cache["k"], k_new, block_tables,
-                                       cache_index)
+                                       cache_index, valid=lane_valid)
             v_pool = ops.paged_scatter(cache["v"], v_new, block_tables,
-                                       cache_index)
+                                       cache_index, valid=lane_valid)
             out = ops.paged_decode_attention(
                 q, k_pool, v_pool, block_tables=block_tables,
                 lengths=cache_index + S, softcap=softcap, scale=scale,
@@ -161,8 +188,10 @@ def apply_attention(
         if jnp.ndim(cache_index) == 1:
             # per-slot lengths (continuous batching): each slot writes at its
             # own offset and is masked to its own seated region only
-            k_cache = scatter_rows(cache["k"], k_new, cache_index)
-            v_cache = scatter_rows(cache["v"], v_new, cache_index)
+            k_cache = scatter_rows(cache["k"], k_new, cache_index,
+                                   valid=lane_valid)
+            v_cache = scatter_rows(cache["v"], v_new, cache_index,
+                                   valid=lane_valid)
             out = ops.decode_attention(
                 q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                 lengths=cache_index + S, softcap=softcap, scale=scale,

@@ -61,6 +61,7 @@ def apply_block(
     cache_index=None,
     decode: bool = False,
     block_tables=None,
+    lane_valid=None,
     mesh=None,
     encoder_out=None,
     memcom: Optional[dict] = None,
@@ -71,6 +72,11 @@ def apply_block(
     ``block_tables`` routes the attention/MLA cache entries through the
     paged block-pool layout; recurrent (conv/ssm) and cross-attention
     entries stay per-slot dense either way.
+
+    ``lane_valid`` (fused serving step) masks ragged decode lanes in the
+    attention/MLA cache writes.  Recurrent mixers cannot honour it (the
+    SSM state would advance over garbage lanes regardless), which is why
+    the engine gates the fused path to attention/MLA-only layouts.
     """
     aux = {"moe_loss": jnp.float32(0.0), "omega": None}
     new_cache = {} if cache is not None else None
@@ -84,7 +90,8 @@ def apply_block(
         o, c = apply_attention(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, block_tables=block_tables, mesh=mesh, impl=impl)
+            decode=decode, block_tables=block_tables, lane_valid=lane_valid,
+            mesh=mesh, impl=impl)
         if c is not None:
             new_cache.update(c)
     elif desc.mixer == "mla":
@@ -94,7 +101,8 @@ def apply_block(
         o, c = apply_mla(
             p["attn"], cfg, hn, positions=positions, mask_offset=mask_offset,
             prefix=prefix, cache=self_cache, cache_index=cache_index,
-            decode=decode, block_tables=block_tables, mesh=mesh, impl=impl)
+            decode=decode, block_tables=block_tables, lane_valid=lane_valid,
+            mesh=mesh, impl=impl)
         if c is not None:
             new_cache.update(c)
     else:  # mamba

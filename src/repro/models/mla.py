@@ -83,10 +83,17 @@ def apply_mla(
     cache_index=None,
     decode: bool = False,
     block_tables=None,
+    lane_valid=None,
     mesh=None,
     impl: str = "auto",
 ):
     """Returns (out, new_cache_or_None).  Cache = {"ckv", "kr"}.
+
+    ``lane_valid`` (B,) int32 (fused serving step, per-slot decode only):
+    lanes ``s >= lane_valid[b]`` are geometry padding — their latent-cache
+    writes are dropped (dense) or routed to the trash block (paged); the
+    absorbed-MQA read is already causally masked per lane, exactly as in
+    :func:`repro.models.attention.apply_attention`.
 
     ``mesh`` is accepted for decode-kernel parity with
     :func:`repro.models.attention.apply_attention` but the absorbed-MQA
@@ -114,14 +121,17 @@ def apply_mla(
         if block_tables is not None:
             assert per_slot, "paged decode needs (slots,) lengths"
             ckv_cache = ops.paged_scatter(cache["ckv"], ckv_new, block_tables,
-                                          cache_index)
+                                          cache_index, valid=lane_valid)
             kr_cache = ops.paged_scatter(cache["kr"], kr_new[:, :, 0, :],
-                                         block_tables, cache_index)
+                                         block_tables, cache_index,
+                                         valid=lane_valid)
         elif per_slot:
             from repro.models.attention import scatter_rows
 
-            ckv_cache = scatter_rows(cache["ckv"], ckv_new, cache_index)
-            kr_cache = scatter_rows(cache["kr"], kr_new[:, :, 0, :], cache_index)
+            ckv_cache = scatter_rows(cache["ckv"], ckv_new, cache_index,
+                                     valid=lane_valid)
+            kr_cache = scatter_rows(cache["kr"], kr_new[:, :, 0, :],
+                                    cache_index, valid=lane_valid)
         else:
             ckv_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_index, axis=1)

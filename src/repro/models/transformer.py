@@ -176,6 +176,7 @@ def forward(
     cache_index=None,
     decode: bool = False,
     block_tables=None,  # (B, nb) int32: paged-cache block tables
+    lane_valid=None,  # (B,) int32: fused-step ragged-lane mask (decode)
     mesh=None,  # tensor-parallel serving mesh (reaches the decode kernels)
 
     capture_hiddens: bool = False,
@@ -240,8 +241,8 @@ def forward(
         return apply_block(
             p, cfg, desc, h, positions=positions, mask_offset=mask_offset,
             prefix=lpre, cache=lcache, cache_index=cache_index, decode=decode,
-            block_tables=block_tables, mesh=mesh, encoder_out=encoder_out,
-            memcom=mem, impl=impl)
+            block_tables=block_tables, lane_valid=lane_valid, mesh=mesh,
+            encoder_out=encoder_out, memcom=mem, impl=impl)
 
     for i, desc in enumerate(cfg.layout.prefix):
         if capture_hiddens:

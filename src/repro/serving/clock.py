@@ -38,6 +38,9 @@ DEFAULT_COSTS: Dict[str, float] = {
     "prefill_token": 2e-5,   # one token of (padded) prefill width
     "compile_token": 2e-4,   # one source token consumed by the compiler
     "promote_chunk": 1e-4,   # one layer-chunk copied up a tier
+    "draft_step": 2e-4,      # one drafter step (speculative decoding) —
+                             # the drafter is the small sibling config, so
+                             # a step costs a fraction of the target's
 }
 
 

@@ -213,25 +213,32 @@ class PrefixCompiler:
             cache.move_to_end(key)
         return fn
 
+    def chunk_body(self, offset: int):
+        """The pure computation of one chunk step: ``(compressor, cache,
+        tokens) -> (new_cache, hiddens)``.  Exposed unjitted so the
+        engine's *fused* serving step can inline a compile chunk into
+        the same program as the batched decode — one dispatch instead of
+        a decode gap (see ``ServingEngine(fused_step=True)``)."""
+        cfg, impl = self.cfg, self.impl
+
+        def run(compressor, cache, tokens):
+            state = memcom.CompressionState(cache=cache, offset=offset)
+            state = memcom.compress_chunk(compressor, cfg, state, tokens,
+                                          impl=impl)
+            return state.cache, state.hiddens[0]
+
+        return run
+
     def _chunk_fn(self, offset: int, width: int, cache_len: int):
         """One compiled chunk step.  Eager ``compress_chunk`` would
         re-trace its scans every call — the whole point of chunking
         (short, predictable gaps between decode steps) dies without jit —
         so chunk programs are compiled once per static geometry and
         reused across tasks."""
-        cfg, impl = self.cfg, self.impl
-
-        def make():
-            def run(compressor, cache, tokens):
-                state = memcom.CompressionState(cache=cache, offset=offset)
-                state = memcom.compress_chunk(compressor, cfg, state, tokens,
-                                              impl=impl)
-                return state.cache, state.hiddens[0]
-
-            return jax.jit(run)
-
+        body = self.chunk_body(offset)
         return self._cached(self._chunk_jit, self._jit_cache_cap,
-                            (offset, width, cache_len), make)
+                            (offset, width, cache_len),
+                            lambda: jax.jit(body))
 
     def _finish_fn(self, widths: Tuple[int, ...], cache_len: int):
         """Compiled finish: Memory-LLM pass over the accumulated H^i +
@@ -259,52 +266,86 @@ class PrefixCompiler:
         return self._cached(self._finish_jit, self._jit_cache_cap,
                             (widths, cache_len), make)
 
+    def _live_job(self) -> Optional[CompileJob]:
+        """The job the next chunk belongs to: one live source cache at a
+        time, so a mid-flight job always runs to completion; otherwise
+        the best ``(priority, seq)`` queued job starts — FIFO within a
+        class."""
+        job = next((j for j in self._jobs.values()
+                    if j.status == "compiling"), None)
+        if job is None:
+            queued = [j for j in self._jobs.values() if j.status == "queued"]
+            job = (min(queued, key=lambda j: (j.priority, j.seq))
+                   if queued else None)
+        return job
+
+    def peek_chunk(self, token_budget: Optional[int] = None
+                   ) -> Optional[Tuple[CompileJob, int, int, int]]:
+        """Describe — and stage — the chunk the next :meth:`step` would
+        run: ``(job, offset, width, cache_len)``, or None when no job
+        has source tokens left.  Initializes the job's source cache
+        (``begin_compress``) so ``job.state.cache`` is ready to feed a
+        chunk program.  The engine's fused step uses this to key/trace
+        its combined decode+compile program, then hands the result to
+        :meth:`absorb_chunk`."""
+        job = self._live_job()
+        if job is None:
+            return None
+        if job.state is None:
+            job.state = memcom.begin_compress(
+                self.cfg, 1, _bucket_len(len(job.tokens)),
+                mc_params=self.compressor, impl=self.impl)
+            job.status = "compiling"
+        w = (job.remaining if token_budget is None
+             else min(job.remaining, token_budget))
+        return job, job.consumed, w, _bucket_len(len(job.tokens))
+
+    def chunk_tokens(self, job: CompileJob, width: int):
+        """The (1, width) token slice the next chunk consumes."""
+        return jnp.asarray(
+            job.tokens[None, job.consumed:job.consumed + width])
+
+    def absorb_chunk(self, job: CompileJob, cache, hid, width: int
+                     ) -> List[str]:
+        """Fold one chunk's result back into the job: advance the source
+        state, bump the counters, and — when the last source token has
+        been consumed — run the (jitted) finish/materialize pass.
+        Returns ``[job.name]`` if the job just compiled, else ``[]``."""
+        job.state = replace(job.state, cache=cache,
+                            offset=job.consumed + width,
+                            hiddens=job.state.hiddens + [hid])
+        job.consumed += width
+        job.widths.append(width)
+        self.stats["chunks"] += 1
+        self.stats["tokens"] += width
+        if job.remaining:
+            return []
+        fn = self._finish_fn(tuple(job.widths),
+                             _bucket_len(len(job.tokens)))
+        job.materialized = fn(self.compressor, self.target_params,
+                              job.state.cache, tuple(job.state.hiddens))
+        job.state = None  # free the source cache
+        job.status = "compiled"
+        self.stats["compiled"] += 1
+        return [job.name]
+
     def step(self, token_budget: Optional[int] = None) -> List[str]:
         """Advance compilation by up to ``token_budget`` source tokens
         (``None`` = run the head job to completion — the stalled
         baseline).  Returns the names that finished this call."""
         finished: List[str] = []
         budget = token_budget
-        while True:
-            # one live source cache at a time: a mid-flight job always
-            # runs to completion; otherwise the best (priority, seq)
-            # queued job starts — FIFO within a class
-            job = next((j for j in self._jobs.values()
-                        if j.status == "compiling"), None)
-            if job is None:
-                queued = [j for j in self._jobs.values()
-                          if j.status == "queued"]
-                job = (min(queued, key=lambda j: (j.priority, j.seq))
-                       if queued else None)
-            if job is None or (budget is not None and budget <= 0):
+        while budget is None or budget > 0:
+            nxt = self.peek_chunk(budget)
+            if nxt is None:
                 break
-            if job.state is None:
-                job.state = memcom.begin_compress(
-                    self.cfg, 1, _bucket_len(len(job.tokens)),
-                    mc_params=self.compressor, impl=self.impl)
-                job.status = "compiling"
-            w = job.remaining if budget is None else min(job.remaining, budget)
-            chunk = jnp.asarray(job.tokens[None, job.consumed:job.consumed + w])
-            cache_len = _bucket_len(len(job.tokens))
-            fn = self._chunk_fn(job.consumed, w, cache_len)
-            cache, hid = fn(self.compressor, job.state.cache, chunk)
-            job.state = replace(job.state, cache=cache, offset=job.consumed + w,
-                                hiddens=job.state.hiddens + [hid])
-            job.consumed += w
-            job.widths.append(w)
-            self.stats["chunks"] += 1
-            self.stats["tokens"] += w
+            job, offset, w, cache_len = nxt
+            fn = self._chunk_fn(offset, w, cache_len)
+            cache, hid = fn(self.compressor, job.state.cache,
+                            self.chunk_tokens(job, w))
+            finished += self.absorb_chunk(job, cache, hid, w)
             if budget is not None:
                 budget -= w
-            if job.remaining == 0:
-                fn = self._finish_fn(tuple(job.widths), cache_len)
-                job.materialized = fn(self.compressor, self.target_params,
-                                      job.state.cache,
-                                      tuple(job.state.hiddens))
-                job.state = None  # free the source cache
-                job.status = "compiled"
-                self.stats["compiled"] += 1
-                finished.append(job.name)
-                if budget is None:
-                    break  # None = one whole job, not the whole queue
+            elif finished:
+                break  # None = one whole job, not the whole queue
         return finished

@@ -63,12 +63,25 @@ Scheduling under load (the traffic harness, ``serving/traffic.py``):
   halved while the mean gap overshoots ``target_decode_gap_s`` and
   doubled back (capped at 8× the configured value) while it undershoots.
 
+Fused step (``fused_step=True``, pure attention/MLA layouts): one jitted
+program per bucketed lane width carries every seated slot's decode lane
+*plus* one bounded token chunk — a joining request's prompt streaming in
+``fused_chunk_tokens``-sized pieces, or a :class:`PrefixCompiler` compile
+chunk — so admission and compile churn never open a decode gap.  With
+``spec_draft=``/``spec_k=`` the same lanes carry speculative decoding: a
+greedy drafter proposes k tokens per slot, the fused step scores k+1
+positions at once, and acceptance (greedy prefix match, or Leviathan
+residual sampling on the request's own rng stream) rolls the per-slot
+length vector forward — rejection is an implicit KV rollback in both
+layouts.  See docs/ARCHITECTURE.md §"Fused step & speculative decoding".
+
 See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 """
 
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -153,6 +166,20 @@ def _bucket(n: int, cap: int) -> int:
     return max(1, min(pow2_bucket(n, 8), cap))
 
 
+def _lane_capable(cfg: ModelConfig) -> bool:
+    """Can this architecture absorb garbage decode lanes?  The fused step
+    (and the drafter's masked decode) pad every slot to a shared lane
+    width W and rely on (a) valid-masked KV scatters and (b) per-lane
+    causal masking to make the padding invisible.  Recurrent mixers break
+    (a)/(b) — the SSM state advances over garbage lanes — and
+    cross-attention/encoder stacks have non-causal reads, so the fused
+    path is gated to pure attention/MLA layouts."""
+    descs = list(cfg.layout.prefix) + list(cfg.layout.period)
+    return (cfg.encoder is None
+            and all(d.mixer in ("attn", "mla") for d in descs)
+            and not any(d.cross_attn for d in descs))
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, target_params, *, slots: int,
                  max_len: int, impl: str = "auto",
@@ -170,7 +197,10 @@ class ServingEngine:
                  preemption: bool = True,
                  autotune_budgets: bool = False,
                  target_decode_gap_s: Optional[float] = None,
-                 autotune_interval: int = 16):
+                 autotune_interval: int = 16,
+                 fused_step: bool = False,
+                 fused_chunk_tokens: int = 16,
+                 spec_draft=None, spec_k: int = 0):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
@@ -187,6 +217,21 @@ class ServingEngine:
                                  "compile_token_budget/promote_layer_budget")
             if autotune_interval < 1:
                 raise ValueError("autotune_interval must be >= 1")
+        if fused_chunk_tokens < 1:
+            raise ValueError("fused_chunk_tokens must be >= 1")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
+        if (spec_k > 0) != (spec_draft is not None):
+            raise ValueError("speculative decoding needs both spec_draft "
+                             "and spec_k >= 1 (or neither)")
+        if spec_k > 0 and not fused_step:
+            raise ValueError("speculative decoding rides the fused step — "
+                             "pass fused_step=True with spec_k")
+        if (fused_step or spec_k) and not _lane_capable(cfg):
+            raise ValueError(
+                f"{cfg.name}: fused_step/speculative decoding need a pure "
+                "attention/MLA layout — recurrent (mamba), cross-attention "
+                "and encoder stacks cannot absorb masked garbage lanes")
         # injected clock (VirtualClock in tests/simulation, wall time in
         # production).  charge()/advance_to() are duck-typed: absent on a
         # wall clock, charging is a no-op and waits become short sleeps.
@@ -242,6 +287,12 @@ class ServingEngine:
             "decode_gaps": 0, "decode_time_s": 0.0,
             "preemptions": 0, "preempted_tokens_refilled": 0,
             "autotune_shrinks": 0, "autotune_grows": 0,
+            # fused step: decode + chunk work in one dispatch
+            "fused_steps": 0, "fused_chunks": 0,
+            "fused_prefill_chunks": 0, "fused_prefill_tokens": 0,
+            "fused_compile_chunks": 0,
+            # speculative decoding
+            "spec_rounds": 0, "draft_proposed": 0, "draft_accepted": 0,
         }
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
@@ -347,6 +398,50 @@ class ServingEngine:
             self._prefill = jax.jit(prefill_fn, static_argnums=(4,))
             self._decode = jax.jit(decode_fn)
             self._decode_greedy = jax.jit(greedy(decode_fn))
+        self._pin = pin
+
+        # ---- fused step + speculative decoding ----
+        # One jitted program family carries the batched decode lanes PLUS
+        # an optional bounded token chunk (a joining slot's prefill, or a
+        # PrefixCompiler compile chunk) in a single dispatch.  Lane widths
+        # are pow2-bucketed so the program ladder stays small; the ladder
+        # is observable through stats()["engine"]["jit_compiles"].
+        self.fused = bool(fused_step)
+        self.fused_chunk_tokens = int(fused_chunk_tokens)
+        self._joining: "OrderedDict[int, dict]" = OrderedDict()
+        self._programs: "OrderedDict[Tuple, object]" = OrderedDict()
+        self._program_cap = 128  # LRU: evicting forces a later re-jit
+        # per-family program-build counts (bucketed geometry keys).  These
+        # are engine-lifetime — reset_stats() leaves them alone so the
+        # bench/traffic harness can see recompile churn across serves.
+        self._jit_compiles: Dict[str, int] = {}
+        self._geom_seen: set = set()
+        self.spec_k = int(spec_k)
+        self._draft_cfg = None
+        self._draft_params = None
+        if self.spec_k:
+            if spec_draft == "self":
+                # self-speculation: the target drafts for itself (no
+                # compressed prefix, plain positions) — the upper bound
+                # for acceptance and the bench's greedy workload
+                self._draft_cfg, self._draft_params = cfg, self.params
+            else:
+                self._draft_cfg, self._draft_params = spec_draft
+            dcfg = self._draft_cfg
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab {dcfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size} — drafts would be meaningless")
+            if not _lane_capable(dcfg):
+                raise ValueError(
+                    f"drafter {dcfg.name}: needs a pure attention/MLA "
+                    "layout (its cache rolls forward by accepted length)")
+            # the drafter keeps its own dense per-slot cache regardless of
+            # the engine's KV layout: it is the small sibling config, so
+            # slots × max_len of its KV is cheap, and it never shares
+            # prefix blocks (it drafts from the plain prompt)
+            self._draft_cache = tfm.init_cache(dcfg, slots, max_len)
+            self._draft_len = np.zeros((slots,), np.int64)
 
     # ------------------------------------------------------------------
     # Prefix seating
@@ -455,6 +550,160 @@ class ServingEngine:
         else:
             self.cache = clear_slot_state(self.cache, slot)
             self._dirty[slot] = False
+
+    # ------------------------------------------------------------------
+    # Fused step + speculative decoding programs
+    # ------------------------------------------------------------------
+
+    def _note_geometry(self, family: str, key) -> None:
+        """Count one jit compilation against a step-function family the
+        first time a (bucketed) geometry key is seen — the per-family
+        totals surface as ``stats()["engine"]["jit_compiles"]`` so
+        recompile churn is visible in the traffic bench."""
+        k = (family, key)
+        if k not in self._geom_seen:
+            self._geom_seen.add(k)
+            self._jit_compiles[family] = self._jit_compiles.get(family, 0) + 1
+
+    def _program(self, family: str, key: Tuple, make):
+        """Geometry-keyed jitted-program registry (LRU-bounded)."""
+        full = (family,) + key
+        fn = self._programs.get(full)
+        if fn is None:
+            fn = self._programs[full] = make()
+            self._jit_compiles[family] = self._jit_compiles.get(family, 0) + 1
+            while len(self._programs) > self._program_cap:
+                self._programs.popitem(last=False)
+        else:
+            self._programs.move_to_end(full)
+        return fn
+
+    def _fused_program(self, W: int, greedy: bool, comp_geom):
+        """The fused step for lane width ``W``: batched decode lanes (+
+        speculative verify lanes) for every slot, an optional prefill
+        chunk lane for a joining slot, and — when ``comp_geom =
+        (offset, width, cache_len)`` — a PrefixCompiler chunk, all in one
+        jitted dispatch.  Ragged lanes are masked by ``valids``: invalid
+        lanes' KV writes are dropped (dense) / trashed (paged) and their
+        outputs ignored; the attention read needs no masking because lane
+        ``s`` of slot ``b`` sits at query position ``starts[b] + s`` and
+        causality hides everything an invalid lane could touch."""
+        cfg, impl, mesh = self.cfg, self.impl, self.mesh
+        pin = self._pin
+        body = (self.compiler.chunk_body(comp_geom[0])
+                if comp_geom is not None else None)
+
+        def make():
+            def run(params, cache, tokens, starts, valids, tables, comp):
+                logits, aux = tfm.forward(
+                    params, cfg, tokens=tokens, cache=cache,
+                    cache_index=starts, decode=True, block_tables=tables,
+                    lane_valid=valids, mesh=mesh, impl=impl)
+                out = (jnp.argmax(logits, -1).astype(jnp.int32)
+                       if greedy else logits)
+                comp_out = None
+                if body is not None:
+                    compressor, src_cache, chunk = comp
+                    comp_out = body(compressor, src_cache, chunk)
+                return out, pin(aux["cache"]), comp_out
+
+            return jax.jit(run)
+
+        return self._program("fused", (W, bool(greedy), comp_geom), make)
+
+    def _draft_prog(self, k: int):
+        """k drafter proposal steps + one catch-up step, scanned in one
+        program.  The catch-up step consumes the last draft (KV write
+        only), so after a fully-accepted round the drafter cache already
+        contains every token the target consumed — no position drift."""
+        dcfg, impl, max_len = self._draft_cfg, self.impl, self.max_len
+
+        def make():
+            def run(dparams, dcache, pending, lens):
+                def body(carry, _):
+                    cache, tok, ln = carry
+                    # drop writes past the drafter stripe: an unmasked
+                    # scatter would *clamp* and corrupt the tail rows
+                    ok = (ln < max_len).astype(jnp.int32)
+                    logits, aux = tfm.forward(
+                        dparams, dcfg, tokens=tok[:, None], cache=cache,
+                        cache_index=ln, decode=True, lane_valid=ok,
+                        impl=impl)
+                    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                    return (aux["cache"], nxt, ln + 1), nxt
+
+                (cache, _, _), drafts = jax.lax.scan(
+                    body, (dcache, pending, lens), None, length=k + 1)
+                # steps 0..k-1 emit d1..dk; step k only rolls the cache
+                return jnp.swapaxes(drafts, 0, 1)[:, :k], cache
+
+            return jax.jit(run)
+
+        return self._program("draft", (k,), make)
+
+    def _draft_prefill(self, slot: int, tokens) -> None:
+        """(Re)build the drafter's stripe for one slot from position 0:
+        the drafter sees the plain prompt (+ any resumed tokens), never
+        the compressed prefix — that only lowers acceptance for prefixed
+        tasks, never correctness, since every draft is verified."""
+        dcfg, impl = self._draft_cfg, self.impl
+        n = len(tokens)
+        width = max(1, min(pow2_bucket(n, 8), self.max_len))
+        padded = np.zeros((1, width), np.int32)
+        padded[0, :n] = tokens
+
+        def make():
+            def run(dparams, dcache, toks, s):
+                row = _slice_slot(dcache, s)
+                _, aux = tfm.forward(dparams, dcfg, tokens=toks, cache=row,
+                                     cache_index=0, mask_offset=0, impl=impl)
+                return _merge_slot(dcache, aux["cache"], s)
+
+            return jax.jit(run)
+
+        prog = self._program("draft_prefill", (width,), make)
+        self._draft_cache = prog(self._draft_params, self._draft_cache,
+                                 jnp.asarray(padded), jnp.int32(slot))
+        self._draft_len[slot] = n
+        self._charge("draft_step", 1)
+
+    @staticmethod
+    def _softmax_row(logits_row: np.ndarray, temperature: float) -> np.ndarray:
+        z = np.asarray(logits_row, np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        return p / p.sum()
+
+    def _spec_sample(self, logits_rows: np.ndarray, drafts: np.ndarray,
+                     temperature: float, rng: np.random.Generator):
+        """Sampled (Leviathan-style) acceptance against a *greedy* drafter:
+        the draft distribution is a point mass at d, so d is accepted with
+        probability p(d) and a rejection resamples from the renormalized
+        residual (p with d zeroed) — the emitted sequence is distributed
+        exactly as token-by-token sampling from the target.  Returns
+        (emitted tokens, number of accepted drafts); draws come from the
+        request's own rng stream."""
+        emitted: List[int] = []
+        accepted = 0
+        for j, d in enumerate(np.asarray(drafts, np.int64)):
+            p = self._softmax_row(logits_rows[j], temperature)
+            if rng.uniform() < p[d]:
+                emitted.append(int(d))
+                accepted += 1
+                continue
+            q = p.copy()
+            q[d] = 0.0
+            tot = q.sum()
+            if tot <= 0.0:  # target is (numerically) a point mass at d too
+                emitted.append(int(d))
+                accepted += 1
+                continue
+            emitted.append(int(rng.choice(len(q), p=q / tot)))
+            return emitted, accepted
+        # every draft accepted: bonus token from the last verify lane
+        p = self._softmax_row(logits_rows[len(drafts)], temperature)
+        emitted.append(int(rng.choice(len(p), p=p)))
+        return emitted, accepted
 
     # ------------------------------------------------------------------
     # Continuous-batching serve loop
@@ -581,7 +830,20 @@ class ServingEngine:
                         "num_blocks or evict resident prefixes")
             if self.preemption and sched.pending:
                 admitted += self._preempt_for_priority(
-                    sched, can_seat, protected={s for s, _ in admitted})
+                    sched, can_seat,
+                    protected={s for s, _ in admitted} | set(self._joining))
+            # fused chunked admission: while other slots are mid-decode, a
+            # new request "joins" — its prompt streams through the fused
+            # step in fused_chunk_tokens-sized chunk lanes instead of one
+            # monolithic prefill gap.  A slot that is itself mid-join counts
+            # as busy too: its chunks flow through fused steps, so a classic
+            # prefill here would land between them as a gap.  Only with
+            # nothing decoding *and* no join in flight does the classic
+            # per-slot prefill stall nobody and stay the fast path.
+            admitted_slots = {s for s, _ in admitted}
+            busy_decode = any(s not in admitted_slots
+                              and s not in self._joining
+                              for s in sched.active_slots())
             for slot, req in admitted:
                 if req.prefix is not None:
                     # skip the re-seat when the slot provably still holds
@@ -607,6 +869,23 @@ class ServingEngine:
                         extra=resumed.size)  # what the gate added
                     base = int(self.base[slot])
                     need = self._blocks_needed(req, base, extra=resumed.size)
+                if resumed.size:
+                    self._counters["preempted_tokens_refilled"] += \
+                        int(resumed.size)
+                    self.trace.append(("resume", req.uid, slot,
+                                       int(resumed.size)))
+                if self.fused and (busy_decode or self._joining):
+                    self._joining[slot] = {"req": req, "toks": toks,
+                                           "consumed": 0}
+                    lengths[slot] = self.base[slot]
+                    if paged:
+                        # the whole window stays reserved; chunk prefills
+                        # and decode steps draw it down as they allocate
+                        self._reserved[slot] = need
+                    self.trace.append(("admit", req.uid, slot))
+                    self.trace.append(("join", req.uid, slot, len(toks)))
+                    continue
+                if paged:
                     n = len(toks)
                     width = (_bucket(n, self.max_len - base)
                              if self._pad_prefill else n)
@@ -616,11 +895,8 @@ class ServingEngine:
                     self._reserved[slot] = max(0, need - covered)
                 row_logits = self._prefill_slot(slot, toks)
                 lengths[slot] = self.base[slot] + len(toks)
-                if resumed.size:
-                    self._counters["preempted_tokens_refilled"] += \
-                        int(resumed.size)
-                    self.trace.append(("resume", req.uid, slot,
-                                       int(resumed.size)))
+                if self.spec_k:
+                    self._draft_prefill(slot, toks)
                 tok = self._sample_row(row_logits, req.temperature,
                                        _stream(req))
                 pending[slot] = tok
@@ -648,62 +924,257 @@ class ServingEngine:
                     # so cold-task time-to-first-token is as low as it gets
                     self._compile_step(None)
                 continue  # admit the next queued/woken requests (or exit)
-            greedy = all(sched.request_in(s).temperature <= 0 for s in active)
-            step = self._decode_greedy if greedy else self._decode
-            step_args = ()
-            if paged:
-                # grow each active slot's table before its write crosses
-                # into an unallocated block (idle slots write into their
-                # own stale blocks or the trash block — both masked)
-                self._ensure_decode_blocks(active, lengths)
-                step_args = (jnp.asarray(self.tables),)
-            t_start = self.clock()
-            out, self.cache = step(
-                self.params, self.cache, jnp.asarray(pending[:, None]),
-                jnp.asarray(lengths, jnp.int32), *step_args)
-            self._charge("decode_step", 1)
-            # the batched step advances *every* slot's recurrent state
-            # (idle rows included), so all slots are dirty from here on
-            self._dirty[:] = True
-            out = np.asarray(out)  # greedy: (slots,) ids; else full logits
-            self._counters["decode_time_s"] += self.clock() - t_start
-            if last_decode_done is not None:
-                # decode gap = non-decode time since the previous step —
-                # admissions, prefills, and (above all) compile chunks;
-                # the online_compile bench reads the dip off these counters
-                gap = t_start - last_decode_done
-                c = self._counters
-                c["decode_gap_max_s"] = max(c["decode_gap_max_s"], gap)
-                c["decode_gap_sum_s"] += gap
-                c["decode_gaps"] += 1
-                self._gap_samples.append(gap)
-                self._gap_window.append(gap)
-            last_decode_done = self.clock()
-            self._counters["decode_steps"] += 1
-            if compiling:
-                self._counters["decode_steps_during_compile"] += 1
-            if promoting:
-                self._counters["decode_steps_during_promote"] += 1
-            self.trace.append(("decode", len(active)))
-            for slot in active:
-                lengths[slot] += 1  # the step consumed this slot's token
-                req = sched.request_in(slot)
-                tok = int(out[slot]) if greedy else self._sample_row(
-                    out[slot], req.temperature, _stream(req))
-                pending[slot] = tok
-                self._counters["tokens_generated"] += 1
-                if sched.record_token(slot, tok):
-                    _finish(slot)
-            if compiling:
-                # interleave: at most compile_token_budget source tokens of
-                # compilation behind this decode step, then decode again
-                self._compile_step(self.compile_token_budget)
-                self._counters["compile_chunks_interleaved"] += 1
-            if promoting:
-                # interleave: at most promote_layer_budget per-layer host→
-                # HBM chunks behind this decode step, then decode again
-                self._promote_step(self.promote_layer_budget)
-                self._counters["promote_steps_interleaved"] += 1
+            decode_lanes = [s for s in active if s not in self._joining]
+            chunk_slot = next(iter(self._joining)) if self._joining else None
+            comp = None
+            if (self.fused and compiling and chunk_slot is None
+                    and self.compile_token_budget is not None):
+                # the chunk lane is free: stage a compile chunk to ride
+                # the fused step (one dispatch, zero extra decode gap)
+                comp = self.compiler.peek_chunk(self.compile_token_budget)
+            spec = bool(self.spec_k and decode_lanes)
+            use_fused = self.fused and (spec or chunk_slot is not None
+                                        or comp is not None)
+            if not use_fused:
+                # ---- classic single-token decode step ----
+                greedy = all(sched.request_in(s).temperature <= 0
+                             for s in active)
+                self._note_geometry("decode", (bool(greedy),))
+                step = self._decode_greedy if greedy else self._decode
+                step_args = ()
+                if paged:
+                    # grow each active slot's table before its write crosses
+                    # into an unallocated block (idle slots write into their
+                    # own stale blocks or the trash block — both masked)
+                    self._ensure_decode_blocks(active, lengths)
+                    step_args = (jnp.asarray(self.tables),)
+                t_start = self.clock()
+                out, self.cache = step(
+                    self.params, self.cache, jnp.asarray(pending[:, None]),
+                    jnp.asarray(lengths, jnp.int32), *step_args)
+                self._charge("decode_step", 1)
+                # the batched step advances *every* slot's recurrent state
+                # (idle rows included), so all slots are dirty from here on
+                self._dirty[:] = True
+                out = np.asarray(out)  # greedy: (slots,) ids; else logits
+                self._counters["decode_time_s"] += self.clock() - t_start
+                if last_decode_done is not None:
+                    # decode gap = non-decode time since the previous step —
+                    # admissions, prefills, and (above all) compile chunks;
+                    # the online_compile bench reads the dip off these
+                    gap = t_start - last_decode_done
+                    c = self._counters
+                    c["decode_gap_max_s"] = max(c["decode_gap_max_s"], gap)
+                    c["decode_gap_sum_s"] += gap
+                    c["decode_gaps"] += 1
+                    self._gap_samples.append(gap)
+                    self._gap_window.append(gap)
+                last_decode_done = self.clock()
+                self._counters["decode_steps"] += 1
+                if compiling:
+                    self._counters["decode_steps_during_compile"] += 1
+                if promoting:
+                    self._counters["decode_steps_during_promote"] += 1
+                self.trace.append(("decode", len(active)))
+                for slot in active:
+                    lengths[slot] += 1  # the step consumed this slot's token
+                    req = sched.request_in(slot)
+                    tok = int(out[slot]) if greedy else self._sample_row(
+                        out[slot], req.temperature, _stream(req))
+                    pending[slot] = tok
+                    self._counters["tokens_generated"] += 1
+                    if self.spec_k:
+                        self._draft_len[slot] += 1
+                    if sched.record_token(slot, tok):
+                        _finish(slot)
+                if compiling:
+                    # interleave: at most compile_token_budget source tokens
+                    # of compilation behind this decode step, then decode
+                    self._compile_step(self.compile_token_budget)
+                    self._counters["compile_chunks_interleaved"] += 1
+                if promoting:
+                    # interleave: at most promote_layer_budget per-layer
+                    # host→HBM chunks behind this decode step, then decode
+                    self._promote_step(self.promote_layer_budget)
+                    self._counters["promote_steps_interleaved"] += 1
+            else:
+                # ---- fused step: decode lanes + one chunk, one dispatch --
+                # everything below up to the post-step bookkeeping happens
+                # inside the decode-step timing window, so admission/compile
+                # churn never widens the measured decode gap
+                t_start = self.clock()
+                drafts = None
+                k_eff = np.zeros((self.slots,), np.int64)
+                if spec:
+                    for s in decode_lanes:
+                        req = sched.request_in(s)
+                        left = req.max_new - len(sched.emitted_tokens(s))
+                        k_eff[s] = max(0, min(
+                            self.spec_k, left - 1,
+                            self.max_len - int(lengths[s]) - 1))
+                    drafts, self._draft_cache = self._draft_prog(self.spec_k)(
+                        self._draft_params, self._draft_cache,
+                        jnp.asarray(pending),
+                        jnp.asarray(self._draft_len, jnp.int32))
+                    drafts = np.asarray(drafts)
+                    self._charge("draft_step", self.spec_k + 1)
+                    self._counters["spec_rounds"] += 1
+                chunk_n, jn = 0, None
+                if chunk_slot is not None:
+                    jn = self._joining[chunk_slot]
+                    chunk_n = min(len(jn["toks"]) - jn["consumed"],
+                                  self.fused_chunk_tokens)
+                lanes = 1 + (self.spec_k if spec else 0)
+                W = pow2_bucket(max(lanes, chunk_n), 1)
+                tokens_in = np.zeros((self.slots, W), np.int32)
+                valids = np.zeros((self.slots,), np.int32)
+                for s in decode_lanes:
+                    tokens_in[s, 0] = pending[s]
+                    kk = int(k_eff[s])
+                    if kk:
+                        tokens_in[s, 1:1 + kk] = drafts[s, :kk]
+                    valids[s] = 1 + kk
+                completing = False
+                if chunk_slot is not None:
+                    c0 = jn["consumed"]
+                    tokens_in[chunk_slot, :chunk_n] = \
+                        jn["toks"][c0:c0 + chunk_n]
+                    valids[chunk_slot] = chunk_n
+                    completing = c0 + chunk_n == len(jn["toks"])
+                greedy = all(sched.request_in(s).temperature <= 0
+                             for s in decode_lanes)
+                if completing and jn["req"].temperature > 0:
+                    greedy = False  # the chunk's first token is sampled
+                if paged:
+                    self._ensure_decode_blocks(decode_lanes, lengths,
+                                               widths=valids)
+                    if chunk_slot is not None:
+                        got = self._prepare_prefill(
+                            chunk_slot, int(lengths[chunk_slot]), chunk_n)
+                        self._reserved[chunk_slot] = max(
+                            0, int(self._reserved[chunk_slot]) - got)
+                comp_geom = comp_args = None
+                cw = 0
+                if comp is not None:
+                    job, offset, cw, clen = comp
+                    comp_geom = (offset, cw, clen)
+                    comp_args = (self.compiler.compressor, job.state.cache,
+                                 self.compiler.chunk_tokens(job, cw))
+                prog = self._fused_program(W, greedy, comp_geom)
+                out, self.cache, comp_out = prog(
+                    self.params, self.cache, jnp.asarray(tokens_in),
+                    jnp.asarray(lengths, jnp.int32), jnp.asarray(valids),
+                    jnp.asarray(self.tables) if paged else None, comp_args)
+                self._charge("decode_step", 1)
+                if chunk_n:
+                    self._charge("prefill_token", chunk_n)
+                if comp is not None:
+                    self._charge("compile_token", cw)
+                self._dirty[:] = True
+                out = np.asarray(out)  # greedy: (slots, W) ids; else logits
+                self._counters["decode_time_s"] += self.clock() - t_start
+                if last_decode_done is not None:
+                    gap = t_start - last_decode_done
+                    c = self._counters
+                    c["decode_gap_max_s"] = max(c["decode_gap_max_s"], gap)
+                    c["decode_gap_sum_s"] += gap
+                    c["decode_gaps"] += 1
+                    self._gap_samples.append(gap)
+                    self._gap_window.append(gap)
+                last_decode_done = self.clock()
+                self._counters["decode_steps"] += 1
+                self._counters["fused_steps"] += 1
+                if chunk_n or comp is not None:
+                    self._counters["fused_chunks"] += 1
+                if compiling:
+                    self._counters["decode_steps_during_compile"] += 1
+                if promoting:
+                    self._counters["decode_steps_during_promote"] += 1
+                self.trace.append(("fused", len(decode_lanes), int(chunk_n),
+                                   int(cw)))
+                if chunk_slot is not None:
+                    jn["consumed"] += chunk_n
+                    lengths[chunk_slot] += chunk_n
+                    self._counters["fused_prefill_chunks"] += 1
+                    self._counters["fused_prefill_tokens"] += int(chunk_n)
+                    if completing:
+                        del self._joining[chunk_slot]
+                        req = jn["req"]
+                        self._counters["prefills"] += 1
+                        if greedy:
+                            tok = int(out[chunk_slot, chunk_n - 1])
+                        else:
+                            tok = self._sample_row(
+                                out[chunk_slot, chunk_n - 1],
+                                req.temperature, _stream(req))
+                        pending[chunk_slot] = tok
+                        if self.spec_k:
+                            self._draft_prefill(chunk_slot, jn["toks"])
+                        self.trace.append(("join_done", req.uid, chunk_slot))
+                        log = self.request_log[req.uid]
+                        if log["first_token_s"] is None:
+                            log["first_token_s"] = self.clock() - epoch
+                        if sched.record_token(chunk_slot, tok):
+                            _finish(chunk_slot)
+                for s in decode_lanes:
+                    req = sched.request_in(s)
+                    kk = int(k_eff[s])
+                    if kk == 0:  # plain decode lane (no drafts this round)
+                        lengths[s] += 1
+                        tok = (int(out[s, 0]) if greedy else self._sample_row(
+                            out[s, 0], req.temperature, _stream(req)))
+                        pending[s] = tok
+                        self._counters["tokens_generated"] += 1
+                        if self.spec_k:
+                            self._draft_len[s] += 1
+                        if sched.record_token(s, tok):
+                            _finish(s)
+                        continue
+                    self._counters["draft_proposed"] += kk
+                    dr = drafts[s, :kk]
+                    if greedy or req.temperature <= 0:
+                        # greedy acceptance: the longest prefix where the
+                        # drafter matched the target's argmax — the emitted
+                        # tokens are exactly the non-speculative sequence
+                        g = (out[s, :kk + 1] if greedy else
+                             np.argmax(out[s, :kk + 1], axis=-1))
+                        a = 0
+                        while a < kk and int(dr[a]) == int(g[a]):
+                            a += 1
+                        emitted = [int(t) for t in g[:a + 1]]
+                    else:
+                        emitted, a = self._spec_sample(
+                            out[s, :kk + 1], dr, req.temperature, _stream(req))
+                    self._counters["draft_accepted"] += a
+                    # implicit KV rollback: only the accepted prefix counts —
+                    # rejected lanes' cache rows sit beyond the new length
+                    # (dense) / in private tail blocks (paged) and are
+                    # causally invisible until overwritten next round
+                    lengths[s] += len(emitted)
+                    self._draft_len[s] += len(emitted)
+                    pending[s] = emitted[-1]
+                    fin = False
+                    for t in emitted:
+                        self._counters["tokens_generated"] += 1
+                        if sched.record_token(s, t):
+                            fin = True
+                            break
+                    if fin:
+                        _finish(s)
+                if comp is not None:
+                    self.compiler.absorb_chunk(job, comp_out[0], comp_out[1],
+                                               cw)
+                    self._counters["fused_compile_chunks"] += 1
+                    self._counters["compile_chunks_interleaved"] += 1
+                    self.trace.append(("compile", cw))
+                elif compiling and self.compile_token_budget is None:
+                    # unbudgeted compile cannot ride the chunk lane — run
+                    # the whole job behind this step (the stalled baseline)
+                    self._compile_step(None)
+                    self._counters["compile_chunks_interleaved"] += 1
+                if promoting:
+                    self._promote_step(self.promote_layer_budget)
+                    self._counters["promote_steps_interleaved"] += 1
             if self._autotune and \
                     len(self._gap_window) >= self.autotune_interval:
                 self._autotune_step()
@@ -995,6 +1466,13 @@ class ServingEngine:
             float(np.percentile(gaps, 50)) if gaps else 0.0
         engine["decode_gap_p99_s"] = \
             float(np.percentile(gaps, 99)) if gaps else 0.0
+        # per step-function family jit-compile counts (bucketed geometry
+        # keys).  Engine-lifetime — reset_stats() leaves them alone — so a
+        # bench can assert the fused bucket ladder caps recompiles.
+        engine["jit_compiles"] = dict(self._jit_compiles)
+        prop = engine["draft_proposed"]
+        engine["accept_rate"] = (engine["draft_accepted"] / prop
+                                 if prop else 0.0)
         out: Dict[str, Optional[dict]] = {
             "engine": engine,
             "prefix_store": dict(self.store.stats),
@@ -1008,6 +1486,14 @@ class ServingEngine:
                 "autotune": bool(self._autotune),
             },
         }
+        if self.fused or self.spec_k:
+            out["fused"] = {
+                "enabled": self.fused,
+                "chunk_tokens": self.fused_chunk_tokens,
+                "spec_k": self.spec_k,
+                "draft": (self._draft_cfg.name
+                          if self._draft_cfg is not None else None),
+            }
         if self.tiers is not None:
             out["prefix_tiers"] = self.tiers.tier_snapshot()
         if self.kv_layout == "paged":
@@ -1039,6 +1525,7 @@ class ServingEngine:
         assert 0 < n <= cap, (n, cap)
         self._counters["prefills"] += 1
         width = _bucket(n, cap) if self._pad_prefill else n
+        self._note_geometry("prefill", (width, base))
         self._charge("prefill_token", width)
         padded = np.zeros((1, width), np.int32)
         padded[0, :n] = tokens
@@ -1091,41 +1578,52 @@ class ServingEngine:
         blocks[table_index] = new
         self.tables[slot, table_index] = new
 
-    def _prepare_prefill(self, slot: int, base: int, width: int) -> None:
+    def _prepare_prefill(self, slot: int, base: int, width: int) -> int:
         """Make the slot's table cover positions [0, base + width):
         copy-on-write a *shared* partial tail block (the prompt's first
         token would land inside it), then allocate fresh private blocks
-        for the rest of the prefill window."""
+        for the rest of the prefill window.  Returns how many blocks were
+        drawn from the free pool (COW copy + fresh) so callers streaming
+        a prompt chunkwise can draw down the slot's reservation."""
         bs = self.block_size
         blocks = self._slot_blocks[slot]
+        got = 0
         if base % bs and blocks:
             ti = base // bs  # the partially-filled tail block's table index
             if self.alloc.refcount(blocks[ti]) > 1:  # shared: store/slots
                 self._cow_block(slot, ti)
+                got += 1
         need = self.alloc.blocks_for(base + width) - len(blocks)
         if need > 0:
             fresh = self.alloc.alloc(need)
             self.tables[slot, len(blocks):len(blocks) + need] = fresh
             blocks.extend(fresh)
+            got += need
+        return got
 
-    def _ensure_decode_blocks(self, active, lengths) -> None:
-        """Before a decode step, extend each active slot's table so the
-        incoming token's write position is block-backed.  Allocations draw
-        down the slot's admission-time reservation."""
+    def _ensure_decode_blocks(self, active, lengths, widths=None) -> None:
+        """Before a decode step, extend each active slot's table so every
+        incoming write position is block-backed — ``widths[slot]`` lanes
+        starting at ``lengths[slot]`` (one token when ``widths`` is None;
+        the fused step's speculative verify lanes pass more).  Allocations
+        draw down the slot's admission-time reservation."""
         bs = self.block_size
         for slot in active:
-            bi = int(lengths[slot]) // bs
+            w = 1 if widths is None else max(1, int(widths[slot]))
+            first = int(lengths[slot]) // bs
+            last = (int(lengths[slot]) + w - 1) // bs
             blocks = self._slot_blocks[slot]
-            if bi == len(blocks):
+            while len(blocks) <= last:
                 fresh = self.alloc.alloc(1)[0]
-                self.tables[slot, bi] = fresh
+                self.tables[slot, len(blocks)] = fresh
                 blocks.append(fresh)
                 self._reserved[slot] = max(0, self._reserved[slot] - 1)
-            elif self.alloc.refcount(blocks[bi]) > 1:
-                # defensive: a decode write into a still-shared block
-                # (cannot happen after a >=1-token prefill, but COW is
-                # cheaper than a corrupted shared prefix)
-                self._cow_block(slot, bi)
+            for bi in range(first, last + 1):
+                if self.alloc.refcount(blocks[bi]) > 1:
+                    # defensive: a decode write into a still-shared block
+                    # (cannot happen after a >=1-token prefill, but COW is
+                    # cheaper than a corrupted shared prefix)
+                    self._cow_block(slot, bi)
 
     def _blocks_needed(self, req: Request, base: int, extra: int = 0) -> int:
         """Worst-case private blocks for a request's whole window:

@@ -377,6 +377,10 @@ GOLDEN_ENGINE_KEYS = sorted([
     "decode_time_s", "decode_gap_p50_s", "decode_gap_p99_s",
     "preemptions", "preempted_tokens_refilled",
     "autotune_shrinks", "autotune_grows",
+    # PR 7: fused step + speculative decoding
+    "fused_steps", "fused_chunks", "fused_prefill_chunks",
+    "fused_prefill_tokens", "fused_compile_chunks", "spec_rounds",
+    "draft_proposed", "draft_accepted", "accept_rate", "jit_compiles",
 ])
 GOLDEN_TIER_KEYS = sorted([
     "hbm_hits", "host_promotes", "disk_loads", "demotes", "spills",
