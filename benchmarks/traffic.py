@@ -33,6 +33,7 @@ its ``traffic`` key.
 from __future__ import annotations
 
 import argparse
+import os
 import shutil
 import tempfile
 import time
@@ -42,8 +43,8 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import memcom
 from repro.models import transformer as tfm
-from repro.serving import ServingEngine, TrafficConfig, VirtualClock, \
-    generate_trace, slo_metrics
+from repro.serving import MetricsRegistry, ServingEngine, Tracer, \
+    TrafficConfig, VirtualClock, generate_trace, slo_metrics
 
 
 def scenario(smoke: bool, *, process: str = "poisson",
@@ -72,7 +73,7 @@ def scenario(smoke: bool, *, process: str = "poisson",
 def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
                 compile_token_budget: int, promote_layer_budget: int,
                 prefix_capacity: int, host_capacity: int,
-                slo_ttft_s: float) -> dict:
+                slo_ttft_s: float, tracer=None, metrics=None) -> dict:
     """One engine lifetime over the trace.  Fresh temp disk dir per run:
     a persistent one would carry spilled shards into the next run and
     break the same-seed determinism the section advertises."""
@@ -87,7 +88,8 @@ def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
         clock=clock, priority_aging_s=0.05,
         autotune_budgets=autotune,
         target_decode_gap_s=2e-3 if autotune else None,
-        autotune_interval=8)
+        autotune_interval=8,
+        tracer=tracer, metrics=metrics)
     try:
         t0 = time.perf_counter()
         engine.serve(list(trace.requests))
@@ -138,9 +140,17 @@ def run_traffic(cfg, target, mc, m, rng, *, smoke: bool = False,
            "num_tasks": tcfg.num_tasks, "num_requests": tcfg.num_requests,
            "rate_rps": tcfg.rate_rps, "zipf_alpha": tcfg.zipf_alpha,
            "priority_classes": tcfg.priority_classes, **sizing}
+    # Telemetry artifacts come off the *fixed* run: it is the simpler of
+    # the two (no autotuner resizing budgets mid-flight), so the trace
+    # reads as the canonical request-lifecycle picture, and — being on
+    # the virtual clock — the dumped JSON is byte-identical per seed.
+    tracer = Tracer()
+    registry = MetricsRegistry()
     rows = []
     for mode, autotune in (("fixed", False), ("autotuned", True)):
         r = _serve_once(cfg, target, mc, m, trace, autotune=autotune,
+                        tracer=tracer if mode == "fixed" else None,
+                        metrics=registry if mode == "fixed" else None,
                         **sizing)
         out[mode] = r
         fb = r["final_budgets"]
@@ -163,6 +173,17 @@ def run_traffic(cfg, target, mc, m, rng, *, smoke: bool = False,
           f"prefix capacity {sizing['prefix_capacity']} — all times are "
           "simulated (virtual clock), identical across runs for one "
           "seed\n")
+    os.makedirs(C.ROOT, exist_ok=True)
+    trace_path = os.path.join(C.ROOT, "traffic_trace.json")
+    tracer.dump(trace_path)
+    prom_path = os.path.join(C.ROOT, "traffic_metrics.prom")
+    with open(prom_path, "w") as fh:
+        fh.write(registry.render_prometheus())
+    out["artifacts"] = {"trace": trace_path, "metrics": prom_path,
+                        "trace_events": len(tracer.events()),
+                        "dropped_events": tracer.dropped}
+    print(f"traffic: wrote {trace_path} "
+          f"({out['artifacts']['trace_events']} events) and {prom_path}\n")
     return out
 
 

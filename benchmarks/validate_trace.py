@@ -1,0 +1,59 @@
+"""Schema-validate a Chrome-trace JSON dumped by the serving Tracer.
+
+CI runs this against the smoke bench's ``traffic_trace.json`` artifact
+so a malformed dump (missing ``ph``/``ts``/``dur`` fields, broken async
+pairing metadata, or a lifecycle span that silently stopped being
+emitted) fails the build instead of shipping an artifact Perfetto cannot
+load.  The checks are the same ones ``repro.serving.validate_chrome_trace``
+exposes to tests:
+
+* every event carries ``ph``, ``pid``, ``tid`` and ``name``;
+* non-metadata events carry ``ts``; complete events (``ph == "X"``)
+  carry ``dur``; async begin/end events carry ``id``;
+* every span name in ``--require`` (default: the tracer's
+  ``REQUIRED_SPANS`` — the full request lifecycle from admission through
+  preempt/resume) appears at least once.
+
+Usage::
+
+    python -m benchmarks.validate_trace artifacts/bench/traffic_trace.json
+    python -m benchmarks.validate_trace trace.json --require admission,finish
+
+Exits 0 when the trace is well-formed, 1 with one error per line on
+stderr otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.serving.telemetry import REQUIRED_SPANS, validate_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("trace", help="path to a Chrome-trace JSON dump")
+    ap.add_argument("--require", default=",".join(REQUIRED_SPANS),
+                    help="comma-separated span names that must appear "
+                         "(default: the tracer's REQUIRED_SPANS; pass '' "
+                         "to check structure only)")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as fh:
+        trace = json.load(fh)
+    require = tuple(s for s in args.require.split(",") if s)
+    errors = validate_chrome_trace(trace, require_spans=require)
+    if errors:
+        for err in errors:
+            print(f"validate_trace: {err}", file=sys.stderr)
+        return 1
+    n = sum(1 for e in trace.get("traceEvents", ()) if e.get("ph") != "M")
+    print(f"validate_trace: OK — {n} events, "
+          f"{len(require)} required span(s) present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -248,6 +248,19 @@ def main():
                     help="weight-sharding rule set for --mesh (baseline: "
                          "tensor/expert parallel; fsdp: +embed over data)")
     ap.add_argument("--metrics", default=None)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record a full request-lifecycle trace and write "
+                         "it as Chrome-trace/Perfetto JSON (open at "
+                         "ui.perfetto.dev); on the virtual clock the file "
+                         "is byte-identical for one (scenario, seed)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the engine's MetricsRegistry in Prometheus "
+                         "text exposition format after serving")
+    ap.add_argument("--flight-recorder", type=int, default=None,
+                    metavar="N",
+                    help="bound the tracer's ring buffer to the last N "
+                         "events (the flight recorder: dumped to "
+                         "--trace-out on a crash); default keeps all")
     args = ap.parse_args()
     if args.tasks < 1 or args.slots < 1 or args.requests < 1:
         ap.error("--tasks, --slots and --requests must all be >= 1")
@@ -259,6 +272,8 @@ def main():
         ap.error("--promote-budget must be >= 1")
     if args.host_capacity is not None and args.host_capacity < 0:
         ap.error("--host-capacity must be >= 0")
+    if args.flight_recorder is not None and args.flight_recorder < 1:
+        ap.error("--flight-recorder must be >= 1")
     if args.raw_shots and args.classify:
         ap.error("--raw-shots serves generation traffic (classify goes "
                  "through the offline seat path)")
@@ -327,6 +342,18 @@ def main():
         from repro.serving import VirtualClock
 
         clock = VirtualClock()
+    tracer = None
+    if args.trace_out or args.flight_recorder:
+        from repro.serving import Tracer
+
+        # the tracer binds to the engine's clock at construction, so on
+        # a --traffic run the spans sit on simulated time
+        tracer = Tracer(capacity=args.flight_recorder,
+                        dump_path=args.trace_out)
+        print(f"[edge] tracing: flight recorder "
+              f"{'unbounded' if args.flight_recorder is None else args.flight_recorder}"
+              f" event(s)"
+              + (f", dump -> {args.trace_out}" if args.trace_out else ""))
     engine = ServingEngine(cfg, target, slots=args.slots,
                            max_len=m + 24 + args.max_new + 16,
                            kv_layout=args.kv_layout,
@@ -348,6 +375,7 @@ def main():
                            fused_step=args.fused_step,
                            fused_chunk_tokens=args.fused_chunk_tokens,
                            spec_draft=spec_draft, spec_k=args.spec_k,
+                           tracer=tracer,
                            **paged_kw)
     if engine.tiers is not None:
         preloaded = engine.tiers.disk_names()
@@ -510,6 +538,21 @@ def main():
         stats = engine.stats()
         print("[stats]", json.dumps(stats, indent=1))
         metrics["stats"] = stats
+
+    if args.trace_out:
+        path = tracer.dump(args.trace_out)
+        n = len(tracer.events())
+        print(f"[edge] trace -> {path} ({n} event(s)"
+              + (f", {tracer.dropped} dropped by the flight recorder"
+                 if tracer.dropped else "") + ")")
+
+    if args.metrics_out:
+        parent = os.path.dirname(args.metrics_out)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.metrics.render_prometheus())
+        print(f"[edge] prometheus metrics -> {args.metrics_out}")
 
     if args.metrics:
         with open(args.metrics, "w") as f:

@@ -41,6 +41,15 @@ from repro.serving.prefix_store import (
 )
 from repro.serving.clock import VirtualClock
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.telemetry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricGroup,
+    MetricsRegistry,
+    Tracer,
+    validate_chrome_trace,
+)
 from repro.serving.tiers import PromotionJob, TieredPrefixStore
 from repro.serving.traffic import (
     Trace,
@@ -58,4 +67,6 @@ __all__ = [
     "materialize_prefix", "write_prefix_to_cache",
     "VirtualClock", "TrafficConfig", "Trace", "generate_trace",
     "slo_metrics",
+    "Tracer", "MetricsRegistry", "MetricGroup",
+    "Counter", "Gauge", "Histogram", "validate_chrome_trace",
 ]

@@ -80,6 +80,7 @@ See docs/ARCHITECTURE.md for the cache layouts and scheduling design.
 
 from __future__ import annotations
 
+import copy
 import time
 from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Tuple
@@ -111,12 +112,18 @@ from repro.serving.prefix_store import (  # re-exported for compatibility
     write_prefix_to_cache,
 )
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.telemetry import (
+    NULL_TRACER,
+    MetricGroup,
+    MetricsRegistry,
+    Tracer,
+)
 from repro.serving.tiers import TieredPrefixStore
 
 __all__ = [
     "ServingEngine", "PrefixStore", "PagedPrefixStore", "PrefixCompiler",
     "Request", "Scheduler", "TieredPrefixStore", "materialize_prefix",
-    "write_prefix_to_cache",
+    "write_prefix_to_cache", "Tracer", "MetricsRegistry",
 ]
 
 
@@ -200,7 +207,9 @@ class ServingEngine:
                  autotune_interval: int = 16,
                  fused_step: bool = False,
                  fused_chunk_tokens: int = 16,
-                 spec_draft=None, spec_k: int = 0):
+                 spec_draft=None, spec_k: int = 0,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
@@ -238,6 +247,17 @@ class ServingEngine:
         self.clock = clock if clock is not None else time.perf_counter
         charge = getattr(self.clock, "charge", None)
         self._charge = charge if charge is not None else (lambda *_: None)
+        # telemetry: a no-op tracer by default (bit-exact serving, near-
+        # zero cost) and a fresh registry unless the caller shares one.
+        # The tracer reads the *engine's* clock so spans line up with
+        # request_log / gap samples on the same timeline.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled and self.tracer.clock is None:
+            self.tracer.clock = self.clock
+        attach = getattr(self.clock, "attach_metrics", None)
+        if attach is not None:
+            attach(self.metrics)  # charged-seconds counters by work kind
         self.priority_aging_s = priority_aging_s
         self.preemption = preemption
         self._autotune = autotune_budgets
@@ -278,8 +298,16 @@ class ServingEngine:
                                         impl=impl, mesh=mesh,
                                         rules=self.rules)
                          if compressor is not None else None)
+        if self.compiler is not None:
+            self.compiler.stats = self.metrics.group(
+                "serving_compiler", self.compiler.stats,
+                help="online prefix compiler counter")
         self.trace: List[Tuple] = []  # per-serve event log (tests/bench)
-        self._counters = {
+        # the counter "dict" is a registry-backed MetricGroup: every
+        # `self._counters[k] += 1` site lands in a `serving_engine_*`
+        # gauge, stats() stays a view over the registry, and the
+        # Prometheus renderer sees live values
+        self._counters = self.metrics.group("serving_engine", {
             "decode_steps": 0, "prefills": 0, "tokens_generated": 0,
             "decode_steps_during_compile": 0, "compile_chunks_interleaved": 0,
             "decode_steps_during_promote": 0, "promote_steps_interleaved": 0,
@@ -293,7 +321,20 @@ class ServingEngine:
             "fused_compile_chunks": 0,
             # speculative decoding
             "spec_rounds": 0, "draft_proposed": 0, "draft_accepted": 0,
-        }
+        }, help="engine loop counter")
+        self._m_gap = self.metrics.histogram(
+            "serving_decode_gap_seconds",
+            "non-decode time between consecutive decode steps")
+        self._m_ttft = self.metrics.histogram(
+            "serving_ttft_seconds", "arrival to first token",
+            labelnames=("priority",))
+        self._m_latency = self.metrics.histogram(
+            "serving_request_latency_seconds", "arrival to finish",
+            labelnames=("priority",))
+        self._m_jit = self.metrics.counter(
+            "serving_jit_compiles_total",
+            "jitted-program builds by step-function family",
+            labelnames=("family",))
         self.base = np.zeros((slots,), np.int64)  # per-slot seated memory
         self.base_len = 0  # batch-wide seat_compressed() compat
         self._seated: List[Optional[str]] = [None] * slots  # named prefix
@@ -331,6 +372,13 @@ class ServingEngine:
             self.cache = tfm.init_cache(cfg, slots, max_len)
             self.store = (prefix_store if prefix_store is not None
                           else PrefixStore(cfg, capacity=prefix_capacity))
+        # adopt the HBM store's hit/miss counters into the registry
+        # *before* a TieredPrefixStore fronts it — the tiered facade's
+        # `stats` property delegates to this same dict
+        if not isinstance(self.store.stats, MetricGroup):
+            self.store.stats = self.metrics.group(
+                "serving_prefix_store", self.store.stats,
+                help="HBM prefix store counter")
         # tiered prefix cache: with a host and/or disk tier configured,
         # the HBM store is fronted by a TieredPrefixStore — evictions
         # demote down the hierarchy instead of dropping, and cold
@@ -341,6 +389,9 @@ class ServingEngine:
             self.store = self.tiers = TieredPrefixStore(
                 self.store, host_capacity=host_capacity, disk_dir=disk_dir,
                 mesh=mesh, rules=self.rules, cache_ref=lambda: self.cache)
+            self.tiers.tier_stats = self.metrics.group(
+                "serving_prefix_tiers", self.tiers.tier_stats,
+                help="tiered prefix cache counter")
         # KV stripes/pools split by head on the "model" axis, recurrent
         # state by channel/head; everything non-divisible replicates
         self.cache = shard_cache(self.cache, mesh, self.rules)
@@ -564,6 +615,7 @@ class ServingEngine:
         if k not in self._geom_seen:
             self._geom_seen.add(k)
             self._jit_compiles[family] = self._jit_compiles.get(family, 0) + 1
+            self._m_jit.inc(family=family)
 
     def _program(self, family: str, key: Tuple, make):
         """Geometry-keyed jitted-program registry (LRU-bounded)."""
@@ -572,6 +624,7 @@ class ServingEngine:
         if fn is None:
             fn = self._programs[full] = make()
             self._jit_compiles[family] = self._jit_compiles.get(family, 0) + 1
+            self._m_jit.inc(family=family)
             while len(self._programs) > self._program_cap:
                 self._programs.popitem(last=False)
         else:
@@ -711,6 +764,18 @@ class ServingEngine:
 
     def serve(self, requests: Iterable[Request], *,
               seed: int = 0) -> Dict[int, np.ndarray]:
+        """Serve requests to completion (see :meth:`_serve_impl` for the
+        full contract).  If the loop dies, the tracer's flight recorder
+        dumps its ring buffer (when a dump path is configured) before
+        the exception propagates — the last N events are the post-mortem."""
+        try:
+            return self._serve_impl(requests, seed=seed)
+        except BaseException:
+            self.tracer.dump_on_error()
+            raise
+
+    def _serve_impl(self, requests: Iterable[Request], *,
+                    seed: int = 0) -> Dict[int, np.ndarray]:
         """Serve a batch of ragged, per-task requests to completion.
 
         Returns {request.uid: generated tokens}.  Output includes the stop
@@ -738,9 +803,17 @@ class ServingEngine:
         """
         epoch = self.clock()  # request_log times are offsets from here
         sched = Scheduler(self.slots, clock=self.clock,
-                          aging_interval_s=self.priority_aging_s)
+                          aging_interval_s=self.priority_aging_s,
+                          metrics=self.metrics)
         self.trace = []
         self.request_log = {}
+        tr = self.tracer
+        # trace ids are serve-local arrival ordinals, NOT Request.uid:
+        # uids come from a process-global counter, so two runs of the
+        # same scenario in one process would dump different JSON — rids
+        # keep the trace a pure function of (scenario, seed)
+        self._rids: Dict[int, int] = {}
+        self._epoch = epoch
         requests = list(requests)
         # validate the whole batch before the first side effect: a bad
         # request must not leave earlier ones' compile jobs orphaned in
@@ -749,6 +822,7 @@ class ServingEngine:
             self._check_request(req)
 
         def _arrive(req: Request) -> None:
+            rid = self._rids[req.uid] = len(self._rids)
             self.request_log[req.uid] = {
                 "priority": int(req.priority),
                 "arrival_s": float(req.arrival_s if req.arrival_s is not None
@@ -756,6 +830,9 @@ class ServingEngine:
                 "first_token_s": None, "finish_s": None,
                 "tokens": 0, "preemptions": 0,
             }
+            if tr.enabled:
+                tr.instant("scheduler", "arrive", rid=rid,
+                           priority=int(req.priority))
             self._submit(sched, req)
 
         # timed requests wait in arrival order until the clock reaches
@@ -799,6 +876,11 @@ class ServingEngine:
             log = self.request_log[req.uid]
             log["finish_s"] = self.clock() - epoch
             log["tokens"] = int(len(toks))
+            self._m_latency.observe(log["finish_s"] - log["arrival_s"],
+                                    priority=log["priority"])
+            if tr.enabled:
+                tr.instant(f"slot{slot}", "finish",
+                           rid=self._rids[req.uid], tokens=len(toks))
 
         while sched.has_work() or future:
             # release timed arrivals whose moment has come
@@ -845,6 +927,7 @@ class ServingEngine:
                               and s not in self._joining
                               for s in sched.active_slots())
             for slot, req in admitted:
+                t_adm = self.clock() if tr.enabled else 0.0
                 if req.prefix is not None:
                     # skip the re-seat when the slot provably still holds
                     # this prefix (KV region [0, m) is never overwritten;
@@ -874,9 +957,13 @@ class ServingEngine:
                         int(resumed.size)
                     self.trace.append(("resume", req.uid, slot,
                                        int(resumed.size)))
+                    if tr.enabled:
+                        tr.instant(f"slot{slot}", "resume",
+                                   rid=self._rids[req.uid],
+                                   tokens=int(resumed.size))
                 if self.fused and (busy_decode or self._joining):
                     self._joining[slot] = {"req": req, "toks": toks,
-                                           "consumed": 0}
+                                           "consumed": 0, "t0": t_adm}
                     lengths[slot] = self.base[slot]
                     if paged:
                         # the whole window stays reserved; chunk prefills
@@ -901,9 +988,17 @@ class ServingEngine:
                                        _stream(req))
                 pending[slot] = tok
                 self.trace.append(("admit", req.uid, slot))
+                if tr.enabled:
+                    tr.span(f"slot{slot}", "admission", t_adm,
+                            rid=self._rids[req.uid], prefix=req.prefix,
+                            prompt_tokens=len(toks),
+                            resumed=int(resumed.size))
                 log = self.request_log[req.uid]
                 if log["first_token_s"] is None:
                     log["first_token_s"] = self.clock() - epoch
+                    self._m_ttft.observe(
+                        log["first_token_s"] - log["arrival_s"],
+                        priority=log["priority"])
                 if sched.record_token(slot, tok):
                     _finish(slot)
             active = sched.active_slots()
@@ -969,7 +1064,11 @@ class ServingEngine:
                     c["decode_gaps"] += 1
                     self._gap_samples.append(gap)
                     self._gap_window.append(gap)
+                    self._m_gap.observe(gap)
                 last_decode_done = self.clock()
+                if tr.enabled:
+                    tr.span("engine", "decode_step", t_start,
+                            last_decode_done, active=len(active))
                 self._counters["decode_steps"] += 1
                 if compiling:
                     self._counters["decode_steps_during_compile"] += 1
@@ -1081,7 +1180,13 @@ class ServingEngine:
                     c["decode_gaps"] += 1
                     self._gap_samples.append(gap)
                     self._gap_window.append(gap)
+                    self._m_gap.observe(gap)
                 last_decode_done = self.clock()
+                if tr.enabled:
+                    tr.span("engine", "fused_step", t_start,
+                            last_decode_done, lanes=len(decode_lanes),
+                            chunk_tokens=int(chunk_n),
+                            compile_tokens=int(cw))
                 self._counters["decode_steps"] += 1
                 self._counters["fused_steps"] += 1
                 if chunk_n or comp is not None:
@@ -1111,9 +1216,18 @@ class ServingEngine:
                         if self.spec_k:
                             self._draft_prefill(chunk_slot, jn["toks"])
                         self.trace.append(("join_done", req.uid, chunk_slot))
+                        if tr.enabled:
+                            tr.span(f"slot{chunk_slot}", "admission",
+                                    jn["t0"], rid=self._rids[req.uid],
+                                    prefix=req.prefix,
+                                    prompt_tokens=len(jn["toks"]),
+                                    fused_join=True)
                         log = self.request_log[req.uid]
                         if log["first_token_s"] is None:
                             log["first_token_s"] = self.clock() - epoch
+                            self._m_ttft.observe(
+                                log["first_token_s"] - log["arrival_s"],
+                                priority=log["priority"])
                         if sched.record_token(chunk_slot, tok):
                             _finish(chunk_slot)
                 for s in decode_lanes:
@@ -1146,6 +1260,10 @@ class ServingEngine:
                         emitted, a = self._spec_sample(
                             out[s, :kk + 1], dr, req.temperature, _stream(req))
                     self._counters["draft_accepted"] += a
+                    if tr.enabled:
+                        tr.instant(f"slot{s}", "spec_accept",
+                                   rid=self._rids[req.uid],
+                                   proposed=kk, accepted=int(a))
                     # implicit KV rollback: only the accepted prefix counts —
                     # rejected lanes' cache rows sit beyond the new length
                     # (dense) / in private tail blocks (paged) and are
@@ -1167,6 +1285,12 @@ class ServingEngine:
                     self._counters["fused_compile_chunks"] += 1
                     self._counters["compile_chunks_interleaved"] += 1
                     self.trace.append(("compile", cw))
+                    if tr.enabled:
+                        # the chunk rode the fused dispatch: its span is
+                        # the step's own window on the compiler track
+                        tr.span("compiler", "compile_chunk", t_start,
+                                last_decode_done, tokens=int(cw),
+                                fused=True)
                 elif compiling and self.compile_token_budget is None:
                     # unbudgeted compile cannot ride the chunk lane — run
                     # the whole job behind this step (the stalled baseline)
@@ -1178,6 +1302,7 @@ class ServingEngine:
             if self._autotune and \
                     len(self._gap_window) >= self.autotune_interval:
                 self._autotune_step()
+        self._refresh_gauges()
         return results
 
     def _preempt_for_priority(self, sched: Scheduler, can_seat,
@@ -1214,6 +1339,10 @@ class ServingEngine:
         self._counters["preemptions"] += 1
         self.request_log[req.uid]["preemptions"] += 1
         self.trace.append(("preempt", req.uid, victim))
+        if self.tracer.enabled:
+            self.tracer.instant(f"slot{victim}", "preempt",
+                                rid=self._rids[req.uid],
+                                by_priority=int(cand.priority))
         return sched.admit(can_seat)
 
     def _advance_to(self, t: float) -> None:
@@ -1252,6 +1381,11 @@ class ServingEngine:
                 self.trace.append(("autotune", "shrink",
                                    self.compile_token_budget,
                                    self.promote_layer_budget))
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "engine", "autotune", action="shrink",
+                        compile_budget=self.compile_token_budget,
+                        promote_budget=self.promote_layer_budget)
         elif mean_gap < self.target_decode_gap_s / 2:
             changed = False
             if init_c is not None and self.compile_token_budget < init_c * 8:
@@ -1267,6 +1401,11 @@ class ServingEngine:
                 self.trace.append(("autotune", "grow",
                                    self.compile_token_budget,
                                    self.promote_layer_budget))
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "engine", "autotune", action="grow",
+                        compile_budget=self.compile_token_budget,
+                        promote_budget=self.promote_layer_budget)
 
     # ------------------------------------------------------------------
     # Online prefix compilation (PrefixCompiler integration)
@@ -1320,6 +1459,10 @@ class ServingEngine:
                                          priority=req.priority)
                 sched.park(req)
                 self.trace.append(("park", req.uid, req.prefix))
+                if self.tracer.enabled:
+                    self.tracer.begin_async(
+                        "scheduler", "waiting_on_prefix",
+                        self._rids[req.uid], prefix=req.prefix)
                 return
         sched.submit(req)
 
@@ -1332,11 +1475,15 @@ class ServingEngine:
 
     def _compile_step(self, token_budget: Optional[int]) -> None:
         before = self.compiler.stats["tokens"]
+        t0 = self.clock()
         self.compiler.step(token_budget)
         consumed = self.compiler.stats["tokens"] - before
         if consumed:
             self._charge("compile_token", consumed)
             self.trace.append(("compile", consumed))
+            if self.tracer.enabled:
+                self.tracer.span("compiler", "compile_chunk", t0,
+                                 tokens=int(consumed))
 
     # ------------------------------------------------------------------
     # Async tier promotion (TieredPrefixStore integration)
@@ -1344,11 +1491,15 @@ class ServingEngine:
 
     def _promote_step(self, chunk_budget: Optional[int]) -> None:
         before = self.tiers.tier_stats["promote_chunks"]
+        t0 = self.clock()
         self.tiers.promote_step(chunk_budget)
         copied = self.tiers.tier_stats["promote_chunks"] - before
         if copied:
             self._charge("promote_chunk", copied)
             self.trace.append(("promote", copied))
+            if self.tracer.enabled:
+                self.tracer.span("promoter", "promote_chunk", t0,
+                                 chunks=int(copied))
 
     def _drain_promoter(self, sched: Scheduler) -> None:
         """Install at most one finished promotion into the HBM store and
@@ -1370,8 +1521,13 @@ class ServingEngine:
             return  # paged seat pressure: retry on a later iteration
         self.tiers.mark_promoted(name)
         self.trace.append(("promoted", name))
+        if self.tracer.enabled:
+            self.tracer.instant("promoter", "promoted", prefix=name)
         for req in sched.wake(name):
             self.trace.append(("wake", req.uid, name))
+            if self.tracer.enabled:
+                self.tracer.end_async("scheduler", "waiting_on_prefix",
+                                      self._rids[req.uid])
 
     def _drain_compiler(self, sched: Scheduler) -> None:
         """Install at most one finished compilation into the store and
@@ -1387,8 +1543,13 @@ class ServingEngine:
             return  # paged seat pressure: retry on a later iteration
         self.compiler.mark_installed(name)
         self.trace.append(("seat", name))
+        if self.tracer.enabled:
+            self.tracer.instant("compiler", "prefix_installed", prefix=name)
         for req in sched.wake(name):
             self.trace.append(("wake", req.uid, name))
+            if self.tracer.enabled:
+                self.tracer.end_async("scheduler", "waiting_on_prefix",
+                                      self._rids[req.uid])
 
     def _try_install(self, name: str, materialized, sched: Scheduler) -> bool:
         """Make a compiled prefix store-resident (see :meth:`_install`)."""
@@ -1459,7 +1620,13 @@ class ServingEngine:
         prefix store's hit/miss/put/eviction counters, the online
         compiler's job/chunk/dedup counters, and (paged) pool occupancy.
         Reported by ``launch/serve.py --stats`` and read by the
-        ``online_compile`` section of ``benchmarks/serving_bench.py``."""
+        ``online_compile`` section of ``benchmarks/serving_bench.py``.
+
+        The counters live in the engine's :class:`MetricsRegistry`
+        (``self.metrics``) — this dict is a *snapshot view* over it,
+        deep-copied so callers can never mutate live counters through
+        the returned reference."""
+        self._refresh_gauges()
         engine = dict(self._counters)
         gaps = self._gap_samples
         engine["decode_gap_p50_s"] = \
@@ -1506,7 +1673,23 @@ class ServingEngine:
         if self.mesh is not None:
             out["mesh"] = {name: int(self.mesh.shape[name])
                            for name in self.mesh.axis_names}
-        return out
+        return copy.deepcopy(out)
+
+    def _refresh_gauges(self) -> None:
+        """Push point-in-time values (pool occupancy, live budgets) into
+        registry gauges so a Prometheus scrape between serves is fresh."""
+        g = self.metrics.gauge
+        g("serving_budget_compile_tokens",
+          "live compile token budget (autotuned)").set(
+              self.compile_token_budget)
+        g("serving_budget_promote_layers",
+          "live promote layer-chunk budget (autotuned)").set(
+              self.promote_layer_budget)
+        if self.kv_layout == "paged":
+            g("serving_pool_blocks_used",
+              "paged KV pool blocks in use").set(self.alloc.used_count)
+            g("serving_pool_blocks_free",
+              "paged KV pool blocks free").set(self.alloc.free_count)
 
     @property
     def gap_samples(self) -> List[float]:

@@ -130,12 +130,33 @@ class Scheduler:
 
     def __init__(self, num_slots: int, *,
                  clock: Optional[Callable[[], float]] = None,
-                 aging_interval_s: Optional[float] = None):
+                 aging_interval_s: Optional[float] = None,
+                 metrics=None):
         self.num_slots = num_slots
         self.clock = clock if clock is not None else time.perf_counter
         if aging_interval_s is not None and aging_interval_s <= 0:
             raise ValueError("aging_interval_s must be positive")
         self.aging_interval_s = aging_interval_s
+        # optional telemetry: a MetricsRegistry (duck-typed — anything
+        # with gauge()/counter()) receives queue-depth gauges and
+        # lifecycle counters; None keeps the scheduler dependency-free
+        self._m = None
+        if metrics is not None:
+            self._m = {
+                "queued": metrics.gauge(
+                    "serving_sched_queued", "requests in the FIFO queue"),
+                "waiting": metrics.gauge(
+                    "serving_sched_waiting_on_prefix",
+                    "requests parked until their prefix is resident"),
+                "running": metrics.gauge(
+                    "serving_sched_running", "slots mid-generation"),
+                "submitted": metrics.counter(
+                    "serving_sched_submitted_total",
+                    "requests entering the scheduler"),
+                "preempted": metrics.counter(
+                    "serving_sched_preemptions_total",
+                    "running slots evicted for a higher class"),
+            }
         self._queue: deque[Request] = deque()
         self._slots: List[Optional[_SlotState]] = [None] * num_slots
         # waiting_on_prefix stage: prefix name -> requests parked until the
@@ -152,14 +173,25 @@ class Scheduler:
 
     # ---- queue side ----
 
+    def _update_gauges(self) -> None:
+        if self._m is None:
+            return
+        self._m["queued"].set(len(self._queue))
+        self._m["waiting"].set(self.num_waiting)
+        self._m["running"].set(
+            sum(1 for s in self._slots if s is not None))
+
     def _stamp(self, request: Request) -> None:
         if request.uid not in self._order:
             self._order[request.uid] = next(self._arrival)
             self._arrive_t[request.uid] = self.clock()
+            if self._m is not None:
+                self._m["submitted"].inc()
 
     def submit(self, request: Request) -> int:
         self._stamp(request)
         self._queue.append(request)
+        self._update_gauges()
         return request.uid
 
     @property
@@ -207,6 +239,7 @@ class Scheduler:
         assert request.prefix is not None, "parking needs a prefix name"
         self._stamp(request)
         self._waiting.setdefault(request.prefix, []).append(request)
+        self._update_gauges()
         return request.uid
 
     @property
@@ -239,6 +272,8 @@ class Scheduler:
         woken = self._waiting.pop(name, [])
         for req in woken:
             self._insert_by_arrival(req)
+        if woken:
+            self._update_gauges()
         return woken
 
     def referenced_prefixes(self) -> set:
@@ -289,6 +324,8 @@ class Scheduler:
             resumed = self._resume.pop(req.uid, None)
             self._slots[slot] = _SlotState(req, emitted=list(resumed or ()))
             seated.append((slot, req))
+        if seated:
+            self._update_gauges()
         return seated
 
     def emitted_tokens(self, slot: int) -> np.ndarray:
@@ -317,6 +354,9 @@ class Scheduler:
         self._resume[req.uid] = list(state.emitted)
         self._insert_by_arrival(req)
         self.preemptions += 1
+        if self._m is not None:
+            self._m["preempted"].inc()
+            self._update_gauges()
         return req
 
     def record_token(self, slot: int, token: int) -> bool:
@@ -336,4 +376,5 @@ class Scheduler:
         state = self._slots[slot]
         assert state is not None, f"slot {slot} is free"
         self._slots[slot] = None
+        self._update_gauges()
         return state.request, np.asarray(state.emitted, np.int32)

@@ -43,6 +43,7 @@ from repro.data.icl_tasks import ICLTaskSpec, build_manyshot_prompt, \
     make_episode, make_query
 from repro.data.synthetic import SyntheticVocab
 from repro.serving.scheduler import Request
+from repro.serving.telemetry import Histogram
 
 __all__ = ["TrafficConfig", "Trace", "generate_trace", "make_catalog",
            "zipf_weights", "slo_metrics"]
@@ -220,7 +221,13 @@ def slo_metrics(request_log: Dict[int, dict], *, slo_ttft_s: float,
       second of makespan (first arrival → last finish).
     * tokens/s/device = generated tokens over the same makespan, split
       across ``devices``.
-    * decode-gap p99 comes from the engine's per-step gap samples.
+    * decode-gap aggregates come from a registry
+      :class:`~repro.serving.telemetry.Histogram` over the engine's
+      per-step gap samples: ``decode_gap_p50/p95/p99_s`` are
+      bucket-interpolated quantiles (the same estimator a Prometheus
+      ``histogram_quantile`` would report from the exposed
+      ``serving_decode_gap_seconds`` series), and ``decode_gap_hist``
+      carries the raw buckets as a bench artifact.
 
     Per-class sub-scoreboards let the priority tests assert class 0's
     TTFT beats class 1's under overload.
@@ -239,6 +246,9 @@ def slo_metrics(request_log: Dict[int, dict], *, slo_ttft_s: float,
         duration = 0.0
     tokens = sum(e["tokens"] for e in done)
     attained = sum(1 for t in ttfts if t <= slo_ttft_s)
+    gap_hist = Histogram("decode_gap_seconds")
+    for g in gap_samples:
+        gap_hist.observe(float(g))
     out = {
         "requests": len(entries),
         "completed": len(done),
@@ -254,7 +264,10 @@ def slo_metrics(request_log: Dict[int, dict], *, slo_ttft_s: float,
         "tokens_generated": int(tokens),
         "tokens_per_s_per_device": (
             float(tokens / duration / max(devices, 1)) if duration else 0.0),
-        "decode_gap_p99_s": _pct(list(gap_samples), 99),
+        "decode_gap_p50_s": gap_hist.percentile(50),
+        "decode_gap_p95_s": gap_hist.percentile(95),
+        "decode_gap_p99_s": gap_hist.percentile(99),
+        "decode_gap_hist": gap_hist.snapshot(),
         "preemptions": int(sum(e["preemptions"] for e in entries)),
     }
     classes = sorted({e["priority"] for e in entries})

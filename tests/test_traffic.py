@@ -165,8 +165,15 @@ def test_slo_metrics_hand_computed():
     assert math.isclose(m["offered_rps"], 4 / 0.4)
     assert m["tokens_generated"] == 9
     assert math.isclose(m["tokens_per_s_per_device"], 9 / 0.4 / 2)
-    # gap p99 interpolates [0.001, 0.002, 0.003] at index 1.98
-    assert math.isclose(m["decode_gap_p99_s"], 0.002 + 0.98 * 0.001)
+    # decode-gap aggregates are bucket-derived (registry Histogram, 1-2-5
+    # ladder): [0.001, 0.002, 0.003] land in the le=0.001/0.002/0.005
+    # buckets.  p99: rank 2.97 falls in (0.002, 0.005] with 2 below →
+    # 0.002 + 0.003 * 0.97; p50: rank 1.5 in (0.001, 0.002] with 1 below.
+    assert math.isclose(m["decode_gap_p99_s"], 0.002 + 0.003 * 0.97)
+    assert math.isclose(m["decode_gap_p50_s"], 0.001 + 0.001 * 0.5)
+    hist = m["decode_gap_hist"]
+    assert hist["count"] == 3 and math.isclose(hist["sum"], 0.006)
+    assert sum(hist["counts"]) == 3 and hist["le"][-1] == "+Inf"
     assert m["preemptions"] == 1
     c0, c1 = m["per_class"]["0"], m["per_class"]["1"]
     assert c0["requests"] == 2 and c0["completed"] == 2
