@@ -1,0 +1,21 @@
+PYTHON ?= python
+
+.PHONY: lint lint-rules test test-sanitize baseline
+
+lint:
+	$(PYTHON) -m tools.reprolint src tests benchmarks
+
+lint-rules:
+	$(PYTHON) -m tools.reprolint --list-rules
+
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+test-sanitize:
+	REPRO_SANITIZE=1 PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+# Regenerate the grandfathered-findings baseline.  Every new entry is
+# written with a TODO justification you must replace by hand — the
+# loader (and CI) rejects unjustified entries.
+baseline:
+	$(PYTHON) -m tools.reprolint src tests benchmarks --update-baseline

@@ -8,7 +8,7 @@ meaningless), so what's timed here is the same math through XLA:CPU.
 
 from __future__ import annotations
 
-import time
+import time  # reprolint: ignore-file[wall-clock] -- benchmarks measure real kernel wall time by definition
 
 import jax
 import jax.numpy as jnp

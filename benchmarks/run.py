@@ -15,7 +15,7 @@ default settings reproduce EXPERIMENTS.md §Reproduction.
 from __future__ import annotations
 
 import argparse
-import time
+import time  # reprolint: ignore-file[wall-clock] -- benchmark driver stamps real run timestamps
 
 
 def main():

@@ -30,7 +30,7 @@ import os
 import subprocess
 import sys
 import tempfile
-import time
+import time  # reprolint: ignore-file[wall-clock] -- SLO bench measures real host latency; deterministic runs inject VirtualClock
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# The exact lint invocation CI's static-analysis job runs.  Stdlib-only:
+# works before any dependency install.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+python -m tools.reprolint src tests benchmarks "$@"

@@ -32,7 +32,7 @@ import dataclasses
 import gc
 import json
 import pathlib
-import time
+import time  # reprolint: ignore-file[wall-clock] -- measuring real host wall time for compile/dispatch latency is the point
 import traceback
 
 import jax

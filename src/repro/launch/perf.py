@@ -17,7 +17,7 @@ import dataclasses
 import gc
 import json
 import pathlib
-import time
+import time  # reprolint: ignore-file[wall-clock] -- a perf harness times the real host clock by design
 
 import jax
 

@@ -125,7 +125,7 @@ _mesh_device_fallback()
 
 import argparse  # noqa: E402  (the device fallback must precede jax)
 import json
-import time
+import time  # reprolint: ignore-file[wall-clock] -- the live server stamps real arrival/finish times; tests use VirtualClock
 
 import jax.numpy as jnp
 import numpy as np

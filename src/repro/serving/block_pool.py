@@ -29,6 +29,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+from repro.serving.sanitize import SanitizerError, sanitizer_enabled
+
 TRASH_BLOCK = 0
 
 
@@ -59,6 +61,9 @@ class BlockAllocator:
         # LIFO free list: recently freed blocks are re-used first (their
         # pool pages are the most likely to still be warm)
         self._free: List[int] = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        # REPRO_SANITIZE=1: re-verify the free/used partition after every
+        # mutation (sampled once at construction; see serving/sanitize.py)
+        self._sanitize = sanitizer_enabled()
 
     # ---- queries ----
 
@@ -90,6 +95,8 @@ class BlockAllocator:
         out = [self._free.pop() for _ in range(n)]
         for b in out:
             self._ref[b] = 1
+        if self._sanitize:
+            self.check_invariants()
         return out
 
     def incref(self, block: int) -> None:
@@ -98,6 +105,8 @@ class BlockAllocator:
         if block not in self._ref:
             raise BlockAllocationError(f"incref of unallocated block {block}")
         self._ref[block] += 1
+        if self._sanitize:
+            self.check_invariants()
 
     def decref(self, block: int) -> None:
         """Drop one reference; frees the block at zero.  Raises on
@@ -112,6 +121,8 @@ class BlockAllocator:
             self._free.append(block)
         else:
             self._ref[block] = count - 1
+        if self._sanitize:
+            self.check_invariants()
 
     # ---- snapshot/restore (stateless scoring runs a throwaway prefill) ----
 
@@ -122,3 +133,36 @@ class BlockAllocator:
         ref, free = snap
         self._ref = dict(ref)
         self._free = list(free)
+        if self._sanitize:
+            self.check_invariants()
+
+    # ---- REPRO_SANITIZE=1 invariant check ----
+
+    def check_invariants(self) -> None:
+        """Assert the module-docstring invariants hold right now; raises
+        :class:`SanitizerError` on the first violation.  Runs after every
+        mutation under ``REPRO_SANITIZE=1`` (and on demand from tests) —
+        the runtime half of reprolint's ``refcount-balance`` contract."""
+        free, ref = self._free, self._ref
+        if len(set(free)) != len(free):
+            raise SanitizerError(
+                f"free list holds duplicate blocks: {sorted(free)}")
+        overlap = set(free) & set(ref)
+        if overlap:
+            raise SanitizerError(
+                f"blocks both free and referenced: {sorted(overlap)}")
+        if TRASH_BLOCK in ref or TRASH_BLOCK in free:
+            raise SanitizerError("reserved trash block 0 entered the pool")
+        bad = {b: c for b, c in ref.items() if c < 1}
+        if bad:
+            raise SanitizerError(f"non-positive refcounts: {bad}")
+        oob = [b for b in list(free) + list(ref)
+               if not 0 < b < self.num_blocks]
+        if oob:
+            raise SanitizerError(
+                f"blocks outside the pool [1, {self.num_blocks}): {oob}")
+        if len(free) + len(ref) != self.num_blocks - 1:
+            raise SanitizerError(
+                f"pool partition broken: {len(free)} free + {len(ref)} "
+                f"used != {self.num_blocks} - 1 blocks — a block was "
+                "lost or duplicated")

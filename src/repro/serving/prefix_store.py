@@ -252,6 +252,10 @@ class PrefixStore:
         LRU host row)."""
         self._check(name)
         if demote and self.demote_hook is not None:
+            # Dense entries own their KV arrays outright — no pool blocks,
+            # no seating — so eviction can never race a seated slot; the
+            # raise-before-demote guard is a paged-store concern.
+            # reprolint: ignore[demote-guard] -- dense KV is owned, not pooled
             self.demote_hook(name, self._entries[name])
         del self._entries[name]
         del self._base_len[name]

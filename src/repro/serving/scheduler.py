@@ -63,7 +63,32 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.sanitize import SanitizerError, sanitizer_enabled
+
 _UIDS = itertools.count()
+
+# ---------------------------------------------------------------------------
+# Stage machine (machine-readable)
+# ---------------------------------------------------------------------------
+#
+# The request lifecycle as data: reprolint's `state-machine` rule checks
+# every `self._transition(uid, src, dst)` call site against this table,
+# and under REPRO_SANITIZE=1 the scheduler validates each move as it
+# happens — the static and the runtime checker read the same literals.
+# "new" is the pre-scheduler stage (a Request object not yet submitted).
+# Both literals must stay pure (no computed values): the linter
+# evaluates them with ast.literal_eval.
+
+STAGES = ("new", "queued", "waiting_on_prefix", "running", "finished")
+
+LEGAL_TRANSITIONS = {
+    ("new", "queued"),                # submit(): prefix resident (or none)
+    ("new", "waiting_on_prefix"),     # park(): prefix compiling/promoting
+    ("waiting_on_prefix", "queued"),  # wake(): prefix became resident
+    ("queued", "running"),            # admit(): seated into a free slot
+    ("running", "queued"),            # preempt(): evicted, tokens stashed
+    ("running", "finished"),          # finish(): stop token or budget
+}
 
 
 @dataclass
@@ -170,6 +195,31 @@ class Scheduler:
         self._arrive_t: dict = {}   # uid -> clock time first seen (for aging)
         self._resume: dict = {}     # uid -> tokens emitted before preemption
         self.preemptions = 0
+        # REPRO_SANITIZE=1: validate every stage move against
+        # LEGAL_TRANSITIONS as it happens (sampled once at construction)
+        self._sanitize = sanitizer_enabled()
+        self._stage: dict = {}      # uid -> current stage (sanitizer only)
+
+    # ---- stage machine ----
+
+    def _transition(self, uid: int, src: str, dst: str) -> None:
+        """Record one stage move.  The (src, dst) literals at every call
+        site are what reprolint's `state-machine` rule checks against
+        LEGAL_TRANSITIONS; under REPRO_SANITIZE=1 this also validates the
+        move at runtime (edge legality + the request really being in
+        ``src``).  A no-op on the hot path when the sanitizer is off."""
+        if not self._sanitize:
+            return
+        if (src, dst) not in LEGAL_TRANSITIONS:
+            raise SanitizerError(
+                f"request {uid}: illegal stage transition {src!r} -> "
+                f"{dst!r} (legal: {sorted(LEGAL_TRANSITIONS)})")
+        cur = self._stage.get(uid, "new")
+        if cur != src:
+            raise SanitizerError(
+                f"request {uid}: transition {src!r} -> {dst!r} but the "
+                f"request is in stage {cur!r}")
+        self._stage[uid] = dst
 
     # ---- queue side ----
 
@@ -190,6 +240,7 @@ class Scheduler:
 
     def submit(self, request: Request) -> int:
         self._stamp(request)
+        self._transition(request.uid, "new", "queued")
         self._queue.append(request)
         self._update_gauges()
         return request.uid
@@ -238,6 +289,7 @@ class Scheduler:
         """Hold a request until its (compiling) prefix becomes resident."""
         assert request.prefix is not None, "parking needs a prefix name"
         self._stamp(request)
+        self._transition(request.uid, "new", "waiting_on_prefix")
         self._waiting.setdefault(request.prefix, []).append(request)
         self._update_gauges()
         return request.uid
@@ -271,6 +323,7 @@ class Scheduler:
         still queued).  Returns the woken requests."""
         woken = self._waiting.pop(name, [])
         for req in woken:
+            self._transition(req.uid, "waiting_on_prefix", "queued")
             self._insert_by_arrival(req)
         if woken:
             self._update_gauges()
@@ -321,6 +374,7 @@ class Scheduler:
             if can_seat is not None and not can_seat(req):
                 break
             del self._queue[idx]
+            self._transition(req.uid, "queued", "running")
             resumed = self._resume.pop(req.uid, None)
             self._slots[slot] = _SlotState(req, emitted=list(resumed or ()))
             seated.append((slot, req))
@@ -351,6 +405,7 @@ class Scheduler:
         assert state is not None, f"slot {slot} is free"
         self._slots[slot] = None
         req = state.request
+        self._transition(req.uid, "running", "queued")
         self._resume[req.uid] = list(state.emitted)
         self._insert_by_arrival(req)
         self.preemptions += 1
@@ -375,6 +430,7 @@ class Scheduler:
         """Release a slot, returning (request, generated tokens)."""
         state = self._slots[slot]
         assert state is not None, f"slot {slot} is free"
+        self._transition(state.request.uid, "running", "finished")
         self._slots[slot] = None
         self._update_gauges()
         return state.request, np.asarray(state.emitted, np.int32)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import json
 import os
-import time
+import time  # reprolint: ignore-file[wall-clock] -- training throughput logs report real step wall time
 from dataclasses import dataclass
 from typing import Callable, Optional
 

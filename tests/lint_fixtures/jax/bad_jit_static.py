@@ -1,0 +1,14 @@
+"""BAD: jax.jit tracing known-static config params."""
+import jax
+
+
+def run(cfg, x):
+    return x * cfg.scale
+
+
+step = jax.jit(run)
+
+
+@jax.jit
+def decode(config, tokens):
+    return tokens[: config.window]

@@ -1,0 +1,21 @@
+"""BAD: mutable defaults shared across calls."""
+import numpy as np
+
+
+def accumulate(x, seen=[]):
+    seen.append(x)
+    return seen
+
+
+def tally(x, counts={}):
+    counts[x] = counts.get(x, 0) + 1
+    return counts
+
+
+def batch(x, buf=np.zeros(4)):
+    return buf + x
+
+
+def gather(x, *, out=list()):
+    out.append(x)
+    return out

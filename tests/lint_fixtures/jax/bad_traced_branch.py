@@ -1,0 +1,25 @@
+"""BAD: python control flow on traced values inside jitted functions."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_branch(x):
+    if x > 0:
+        return x
+    return jnp.zeros_like(x)
+
+
+def clipped(x, limit):
+    while x < limit:
+        x = x * 2
+    return x
+
+
+clipped_jit = jax.jit(clipped)
+
+
+@jax.jit
+def checked(x):
+    assert x >= 0
+    return jnp.sqrt(x)

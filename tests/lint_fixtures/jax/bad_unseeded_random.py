@@ -1,0 +1,21 @@
+"""BAD: global-state / unseeded RNG -> unseeded-random findings."""
+import random
+
+import numpy as np
+
+
+def legacy_numpy():
+    np.random.seed(0)
+    return np.random.rand(4)
+
+
+def unseeded_generator():
+    return np.random.default_rng()
+
+
+def stdlib_global():
+    return random.randint(0, 10)
+
+
+def unseeded_instance():
+    return random.Random()

@@ -1,0 +1,15 @@
+"""BAD: direct wall-clock reads -> wall-clock findings."""
+import time
+from datetime import datetime
+
+
+def stamp():
+    return time.time()
+
+
+def tick():
+    return time.perf_counter()
+
+
+def today():
+    return datetime.now()

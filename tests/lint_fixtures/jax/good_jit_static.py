@@ -1,0 +1,17 @@
+"""GOOD: config params declared static."""
+from functools import partial
+
+import jax
+
+
+def run(cfg, x):
+    return x * cfg.scale
+
+
+step = jax.jit(run, static_argnames=("cfg",))
+step_by_num = jax.jit(run, static_argnums=(0,))
+
+
+@partial(jax.jit, static_argnames=("config",))
+def decode(config, tokens):
+    return tokens[: config.window]

@@ -1,0 +1,15 @@
+"""GOOD: None / immutable defaults, containers built in the body."""
+
+
+def accumulate(x, seen=None):
+    seen = [] if seen is None else seen
+    seen.append(x)
+    return seen
+
+
+def masked(x, axes=(0, 1)):
+    return x, axes
+
+
+def tagged(x, tags=frozenset()):
+    return x, tags

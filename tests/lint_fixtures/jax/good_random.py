@@ -1,0 +1,14 @@
+"""GOOD: seeded generators threaded explicitly."""
+import random
+
+import numpy as np
+
+
+def seeded_numpy(seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(4,))
+
+
+def seeded_stdlib(seed):
+    rng = random.Random(seed)
+    return rng.randint(0, 10)

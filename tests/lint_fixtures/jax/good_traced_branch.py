@@ -1,0 +1,35 @@
+"""GOOD: trace-time python (shape/len/static args/None checks) and
+lax.cond for value-dependent branches."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def shape_branch(x):
+    if x.shape[0] > 2:
+        return x[:2]
+    return x
+
+
+@jax.jit
+def len_branch(xs):
+    if len(xs.shape) == 2:
+        return xs.sum(-1)
+    return xs
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def masked(x, causal):
+    if causal:
+        return jnp.tril(x)
+    return x
+
+
+@jax.jit
+def optional(x, bias=None):
+    if bias is not None:
+        x = x + bias
+    return lax.cond(jnp.all(x > 0), lambda v: v, jnp.abs, x)

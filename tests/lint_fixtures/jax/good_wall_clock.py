@@ -1,0 +1,11 @@
+"""GOOD: the sanctioned clock-injection pattern — time.perf_counter is
+*referenced* as a default callable, never called here."""
+import time
+
+
+class Timed:
+    def __init__(self, clock=None):
+        self.clock = clock if clock is not None else time.perf_counter
+
+    def stamp(self):
+        return self.clock()

@@ -1,0 +1,20 @@
+"""BAD kernel: direct pltpu.CompilerParams, index-map arity mismatch,
+no registered reference twin."""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch_bad(x):
+    params = pltpu.CompilerParams(dimension_semantics=("parallel",))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((128, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=x,
+        compiler_params=params,
+    )(x)

@@ -1,0 +1,22 @@
+"""GOOD kernel: compat-shim params, arity-correct index maps, a
+registered reference twin."""
+from jax.experimental import pallas as pl
+
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    grid = (4, 2)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((128, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+        out_shape=x,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(x)

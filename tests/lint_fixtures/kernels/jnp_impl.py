@@ -1,0 +1,1 @@
+"""jnp twins for the kernel fixtures (none registered yet)."""

@@ -1,0 +1,5 @@
+"""Reference twins for the kernel fixtures."""
+
+
+def launch_ref(x):
+    return x

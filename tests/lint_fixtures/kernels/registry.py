@@ -1,0 +1,5 @@
+"""Mini twin registry for the kernel-rule fixtures."""
+
+REFERENCE_TWINS = {
+    "good_kernel:launch": "ref:launch_ref",
+}

@@ -1,0 +1,8 @@
+"""BAD: demote hook fired without the seated guard."""
+
+
+class Store:
+    def evict(self, name):
+        entry = self._entries.pop(name)
+        if self.demote_hook is not None:
+            self.demote_hook(name, entry)

@@ -1,0 +1,9 @@
+"""BAD: device->host syncs in the decode hot path."""
+
+
+class Engine:
+    def step(self, tokens):
+        return float(self._decode(tokens))
+
+    def drain(self, arr):
+        return [x.item() for x in arr]

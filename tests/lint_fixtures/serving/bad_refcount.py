@@ -1,0 +1,17 @@
+"""BAD: block acquisitions leaking on return / exception edges."""
+
+
+class Pool:
+    def leak_on_return(self, n):
+        blocks = self.alloc.alloc(n)
+        if n > 4:
+            return None
+        self._tables[0] = blocks
+
+    def leak_on_exception_edge(self, store, name, entry, n):
+        blocks = self.alloc.alloc(n)
+        store.put(name, entry)
+        self._tables[0] = blocks
+
+    def discarded(self):
+        self.alloc.alloc(2)

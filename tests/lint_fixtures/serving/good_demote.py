@@ -1,0 +1,14 @@
+"""GOOD: seated guard raises before the demote hook can fire."""
+
+
+class PrefixSeatedError(RuntimeError):
+    pass
+
+
+class Store:
+    def evict(self, name):
+        if self._seated(name):
+            raise PrefixSeatedError(name)
+        if self.demote_hook is not None:
+            self.demote_hook(name, self._entries[name])
+        del self._entries[name]

@@ -1,0 +1,26 @@
+"""GOOD: every acquisition is released or transferred on all paths."""
+
+
+class Pool:
+    def seat(self, name, n):
+        blocks = self.alloc.alloc(n)
+        self._tables[name] = blocks
+
+    def seat_shared(self, blocks):
+        for b in blocks:
+            self.alloc.incref(b)
+        self._slots.append(blocks)
+
+    def scoped(self, n):
+        blocks = self.alloc.alloc(n)
+        try:
+            return self._score(blocks)
+        finally:
+            for b in blocks:
+                self.alloc.decref(b)
+
+    def raiser_after_release(self, store, name, entry, n):
+        blocks = self.alloc.alloc(n)
+        for b in blocks:
+            self.alloc.decref(b)
+        store.put(name, entry)

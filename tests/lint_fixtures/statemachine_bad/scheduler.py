@@ -1,0 +1,28 @@
+"""BAD scheduler: illegal edge, non-literal stages, unrecorded method."""
+
+STAGES = ("new", "queued", "running", "finished")
+
+LEGAL_TRANSITIONS = {
+    ("new", "queued"),
+    ("queued", "running"),
+    ("running", "finished"),
+}
+
+
+class Scheduler:
+    def _transition(self, uid, src, dst):
+        pass
+
+    def submit(self, request):
+        # ("finished" -> "running") is not an edge in the table
+        self._transition(request.uid, "finished", "running")
+        self._queue.append(request)
+
+    def park(self, request):
+        # moves the request but never records it via _transition()
+        self._waiting.append(request)
+
+    def wake(self, name):
+        src, dst = self._edge_for(name)
+        # stages computed at runtime — statically uncheckable
+        self._transition(name, src, dst)

@@ -1,0 +1,39 @@
+"""GOOD scheduler: every stage move is a literal legal edge."""
+
+STAGES = ("new", "queued", "waiting_on_prefix", "running", "finished")
+
+LEGAL_TRANSITIONS = {
+    ("new", "queued"),
+    ("new", "waiting_on_prefix"),
+    ("waiting_on_prefix", "queued"),
+    ("queued", "running"),
+    ("running", "queued"),
+    ("running", "finished"),
+}
+
+
+class Scheduler:
+    def _transition(self, uid, src, dst):
+        pass
+
+    def submit(self, request):
+        self._transition(request.uid, "new", "queued")
+
+    def park(self, request):
+        self._transition(request.uid, "new", "waiting_on_prefix")
+
+    def wake(self, name):
+        for req in self._waiting.pop(name, []):
+            self._transition(req.uid, "waiting_on_prefix", "queued")
+
+    def admit(self):
+        req = self._queue.pop(0)
+        self._transition(req.uid, "queued", "running")
+
+    def preempt(self, slot):
+        req = self._slots[slot]
+        self._transition(req.uid, "running", "queued")
+
+    def finish(self, slot):
+        req = self._slots[slot]
+        self._transition(req.uid, "running", "finished")

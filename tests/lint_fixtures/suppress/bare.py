@@ -1,0 +1,11 @@
+"""Suppressions without a reason or without a rule id are themselves
+findings (bare-suppression)."""
+import time
+
+
+def no_reason():
+    return time.time()  # reprolint: ignore[wall-clock]
+
+
+def no_rule():
+    return time.monotonic()  # reprolint: ignore -- too lazy to name the rule

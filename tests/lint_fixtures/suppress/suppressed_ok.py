@@ -1,0 +1,11 @@
+"""Suppression with a named rule and a written reason -> clean."""
+import time
+
+
+def stamp():
+    return time.time()  # reprolint: ignore[wall-clock] -- fixture: sanctioned example
+
+
+def stamp_line_above():
+    # reprolint: ignore[wall-clock] -- fixture: reason on the line above
+    return time.monotonic()

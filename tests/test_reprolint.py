@@ -1,0 +1,249 @@
+"""reprolint test suite: every rule family against good/bad fixtures,
+plus suppression, baseline, and CLI semantics.
+
+Fixtures live in ``tests/lint_fixtures/`` (skipped by the main lint run);
+path-gated rules are exercised through the fixtures' real paths (the
+``serving``/``kernels`` parent dirs and ``scheduler.py`` basenames are
+what the gates key on) or through :func:`lint_source` with a fake path.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.reprolint import RULES  # noqa: E402
+from tools.reprolint.core import (  # noqa: E402
+    Baseline, BaselineError, Finding, lint_file, lint_source)
+from tools.reprolint.__main__ import main as reprolint_main  # noqa: E402
+
+FIX = ROOT / "tests" / "lint_fixtures"
+
+
+def rules_hit(path: Path) -> set:
+    return {f.rule for f in lint_file(path)}
+
+
+# ---------------------------------------------------------------------------
+# family 1: jax / determinism hazards
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad,good,rule_id", [
+    ("jax/bad_wall_clock.py", "jax/good_wall_clock.py", "wall-clock"),
+    ("jax/bad_unseeded_random.py", "jax/good_random.py", "unseeded-random"),
+    ("jax/bad_traced_branch.py", "jax/good_traced_branch.py",
+     "traced-branch"),
+    ("jax/bad_mutable_default.py", "jax/good_mutable_default.py",
+     "mutable-default"),
+    ("serving/bad_host_sync.py", "serving/good_host_sync.py",
+     "host-sync-decode"),
+    ("serving/bad_refcount.py", "serving/good_refcount.py",
+     "refcount-balance"),
+    ("serving/bad_demote.py", "serving/good_demote.py", "demote-guard"),
+    ("statemachine_bad/scheduler.py", "statemachine_good/scheduler.py",
+     "state-machine"),
+    ("kernels/bad_kernel.py", "kernels/good_kernel.py", "pltpu-compat"),
+    ("kernels/bad_kernel.py", "kernels/good_kernel.py", "blockspec-arity"),
+    ("kernels/bad_kernel.py", "kernels/good_kernel.py", "ref-twin"),
+])
+def test_rule_fires_on_bad_not_good(bad, good, rule_id):
+    assert rule_id in rules_hit(FIX / bad), f"{rule_id} missed {bad}"
+    assert rule_id not in rules_hit(FIX / good), \
+        f"{rule_id} false-positive on {good}"
+
+
+def test_jit_static_hint_both_forms():
+    hit = rules_hit(FIX / "jax/bad_jit_static.py")
+    assert "jit-static-hint" in hit            # jax.jit(run) call form
+    assert "jit-static-hint-decorator" in hit  # @jax.jit decorator form
+    good = rules_hit(FIX / "jax/good_jit_static.py")
+    assert "jit-static-hint" not in good
+    assert "jit-static-hint-decorator" not in good
+
+
+def test_wall_clock_allowed_in_clock_module():
+    src = "import time\ndef now():\n    return time.monotonic()\n"
+    assert lint_source("src/repro/serving/clock.py", src,
+                       rule_ids=["wall-clock"]) == []
+    assert lint_source("src/repro/serving/engine.py", src,
+                       rule_ids=["wall-clock"]) != []
+
+
+def test_traced_branch_counts():
+    finds = [f for f in lint_file(FIX / "jax/bad_traced_branch.py")
+             if f.rule == "traced-branch"]
+    # the if, the while, and the assert
+    assert len(finds) == 3
+
+
+def test_refcount_exception_edge_and_discard():
+    msgs = [f.message for f in lint_file(FIX / "serving/bad_refcount.py")
+            if f.rule == "refcount-balance"]
+    assert len(msgs) == 3
+    assert any("may raise" in m for m in msgs)
+    assert any("discarded" in m for m in msgs)
+    assert any("return" in m for m in msgs)
+
+
+def test_state_machine_requires_table():
+    src = ("class Scheduler:\n"
+           "    def submit(self, request):\n"
+           "        self._queue.append(request)\n")
+    finds = lint_source("pkg/scheduler.py", src, rule_ids=["state-machine"])
+    assert any("STAGES" in f.message for f in finds)
+    # not a scheduler file -> rule does not apply at all
+    assert lint_source("pkg/other.py", src, rule_ids=["state-machine"]) == []
+
+
+def test_state_machine_bad_details():
+    msgs = [f.message for f in
+            lint_file(FIX / "statemachine_bad/scheduler.py")]
+    assert any("illegal stage transition" in m for m in msgs)
+    assert any("string literals" in m for m in msgs)
+    assert any("park" in m for m in msgs)  # unrecorded stage move
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_is_clean():
+    assert lint_file(FIX / "suppress/suppressed_ok.py") == []
+
+
+def test_bare_suppressions_are_findings():
+    finds = lint_file(FIX / "suppress/bare.py")
+    assert {f.rule for f in finds} == {"bare-suppression"}
+    assert len(finds) == 2  # missing reason + missing rule id
+
+
+def test_suppression_only_covers_named_rule():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.time()  "
+           "# reprolint: ignore[unseeded-random] -- wrong rule\n")
+    finds = lint_source("x.py", src)
+    assert "wall-clock" in {f.rule for f in finds}
+
+
+def test_file_level_suppression():
+    src = ("# reprolint: ignore-file[wall-clock] -- this file measures "
+           "real time\n"
+           "import time\n"
+           "def f():\n"
+           "    return time.time()\n"
+           "def g():\n"
+           "    return time.monotonic()\n")
+    assert lint_source("x.py", src) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip_and_multiset(tmp_path):
+    findings = [f for f in lint_file(FIX / "jax/bad_wall_clock.py")
+                if f.rule == "wall-clock"]
+    assert findings
+    bl_path = tmp_path / "baseline.json"
+    Baseline.dump(findings, bl_path)
+    data = json.loads(bl_path.read_text())
+    for e in data["findings"]:
+        e["justification"] = "fixture: grandfathered for the test"
+    bl_path.write_text(json.dumps(data))
+    bl = Baseline.load(bl_path)
+    fresh, matched = bl.filter(findings)
+    assert fresh == [] and matched == len(findings)
+    # multiset semantics: a second copy of a baselined finding is NEW
+    dup = findings + [findings[0]]
+    fresh, matched = bl.filter(dup)
+    assert len(fresh) == 1 and matched == len(findings)
+
+
+def test_baseline_requires_justification(tmp_path):
+    bl_path = tmp_path / "baseline.json"
+    bl_path.write_text(json.dumps({"findings": [
+        {"rule": "wall-clock", "path": "x.py", "context": "time.time()",
+         "justification": "   "}]}))
+    with pytest.raises(BaselineError):
+        Baseline.load(bl_path)
+
+
+def test_baseline_key_survives_line_shift():
+    a = Finding("wall-clock", "x.py", 10, "m", context="t = time.time()")
+    b = Finding("wall-clock", "x.py", 99, "m", context="t = time.time()")
+    assert a.key() == b.key()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = FIX / "jax" / "bad_wall_clock.py"
+    good = FIX / "suppress" / "suppressed_ok.py"
+    assert reprolint_main([str(bad), "--no-baseline"]) == 1
+    assert reprolint_main([str(good), "--no-baseline"]) == 0
+    assert reprolint_main([str(bad), "--rule", "no-such-rule"]) == 2
+    assert reprolint_main([str(tmp_path)]) == 2  # no python files
+    assert reprolint_main(["--list-rules"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_update_baseline_then_clean(tmp_path, capsys):
+    bad = FIX / "jax" / "bad_wall_clock.py"
+    bl = tmp_path / "bl.json"
+    assert reprolint_main([str(bad), "--update-baseline",
+                           "--baseline", str(bl)]) == 0
+    data = json.loads(bl.read_text())
+    for e in data["findings"]:
+        e["justification"] = "fixture: accepted for this test"
+    bl.write_text(json.dumps(data))
+    assert reprolint_main([str(bad), "--baseline", str(bl)]) == 0
+    capsys.readouterr()
+
+
+def test_cli_json_format(capsys):
+    bad = FIX / "jax" / "bad_wall_clock.py"
+    assert reprolint_main([str(bad), "--no-baseline",
+                           "--format", "json"]) == 1
+    out = capsys.readouterr().out
+    payload = json.loads(out[out.index("["):])
+    assert all(f["rule"] == "wall-clock" for f in payload)
+
+
+# ---------------------------------------------------------------------------
+# the repo itself stays lint-clean (the tentpole's lock-in)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_lint_clean(capsys):
+    rc = reprolint_main([str(ROOT / "src"), str(ROOT / "tests"),
+                         str(ROOT / "benchmarks"),
+                         "--baseline",
+                         str(ROOT / "tools/reprolint/baseline.json")])
+    out = capsys.readouterr()
+    assert rc == 0, f"repo not lint-clean:\n{out.out}\n{out.err}"
+
+
+def test_rule_catalog_documented():
+    """Every registered rule appears in docs/LINTS.md."""
+    doc = (ROOT / "docs" / "LINTS.md").read_text(encoding="utf-8")
+    for rid in RULES:
+        assert f"`{rid}`" in doc, f"rule {rid} missing from docs/LINTS.md"
+
+
+def test_reference_twins_resolve():
+    """The real REFERENCE_TWINS registry must name importable callables."""
+    from repro.kernels import registry
+    for key in registry.REFERENCE_TWINS:
+        assert callable(registry.resolve(key)), key

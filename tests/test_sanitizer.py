@@ -1,0 +1,171 @@
+"""REPRO_SANITIZE=1 runtime sanitizer: corrupt the pool / drive the
+scheduler off the legal stage machine and assert the sanitizer trips —
+and that with the flag off, the same hooks cost nothing and stay silent.
+
+The flag is sampled once at object construction, so every test builds
+its objects *after* flipping the environment.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.block_pool import BlockAllocator
+from repro.serving.sanitize import SanitizerError, sanitizer_enabled
+from repro.serving.scheduler import (
+    LEGAL_TRANSITIONS, STAGES, Request, Scheduler)
+
+
+@pytest.fixture
+def sanitize(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+
+
+def req(**kw):
+    kw.setdefault("tokens", np.array([1, 2, 3], np.int32))
+    kw.setdefault("max_new", 4)
+    return Request(**kw)
+
+
+# ---------------------------------------------------------------------------
+# flag plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_flag_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitizer_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitizer_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitizer_enabled()
+
+
+def test_sanitizer_error_is_assertion():
+    assert issubclass(SanitizerError, AssertionError)
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+
+def test_clean_pool_passes_under_sanitizer(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = a.alloc(3)
+    a.incref(blocks[0])
+    a.decref(blocks[0])
+    for b in blocks:
+        a.decref(b)
+    assert a.free_count == 7
+
+
+def test_corrupted_refcount_trips(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = a.alloc(2)
+    a._ref[blocks[0]] = 0  # corrupt: non-positive refcount
+    with pytest.raises(SanitizerError, match="non-positive"):
+        a.alloc(1)
+
+
+def test_free_list_duplicate_trips(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    a._free[1] = a._free[0]  # corrupt: duplicate free block
+    with pytest.raises(SanitizerError, match="duplicate"):
+        a.alloc(1)
+
+
+def test_lost_block_trips(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = a.alloc(2)
+    del a._ref[blocks[0]]  # corrupt: block vanished from both sets
+    with pytest.raises(SanitizerError, match="partition"):
+        a.decref(blocks[1])
+
+
+def test_free_and_referenced_overlap_trips(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = a.alloc(1)
+    a._free.append(blocks[0])  # corrupt: free AND refcounted
+    with pytest.raises(SanitizerError, match="both free and referenced"):
+        a.incref(blocks[0])
+
+
+def test_restore_validates_snapshot(sanitize):
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    snap = a.snapshot()
+    ref, free = snap
+    ref[2] = 0  # corrupt the snapshot itself
+    with pytest.raises(SanitizerError):
+        a.restore((ref, free))
+
+
+def test_sanitizer_off_is_silent(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    blocks = a.alloc(2)
+    a._ref[blocks[0]] = 0  # same corruption as above
+    a.alloc(1)  # no invariant re-check -> no raise
+    with pytest.raises(SanitizerError):
+        a.check_invariants()  # on-demand check still available
+
+
+# ---------------------------------------------------------------------------
+# scheduler stage machine
+# ---------------------------------------------------------------------------
+
+
+def test_table_is_well_formed():
+    assert set(STAGES) == {s for e in LEGAL_TRANSITIONS for s in e}
+    for src, dst in LEGAL_TRANSITIONS:
+        assert src in STAGES and dst in STAGES
+
+
+def test_legal_lifecycle_passes(sanitize):
+    s = Scheduler(num_slots=2, clock=lambda: 0.0)
+    r = req()
+    s.submit(r)
+    admitted = s.admit()
+    assert [a.uid for _, a in admitted] == [r.uid]
+    slot = admitted[0][0]
+    s.preempt(slot)
+    admitted = s.admit()
+    slot = admitted[0][0]
+    s.record_token(slot, 7)
+    s.finish(slot)
+    assert s._stage[r.uid] == "finished"
+
+
+def test_double_submit_trips(sanitize):
+    s = Scheduler(num_slots=2, clock=lambda: 0.0)
+    r = req()
+    s.submit(r)
+    with pytest.raises(SanitizerError, match="stage 'queued'"):
+        s.submit(r)
+
+
+def test_park_after_submit_trips(sanitize):
+    s = Scheduler(num_slots=2, clock=lambda: 0.0)
+    r = req(prefix="task-a")
+    s.submit(r)
+    with pytest.raises(SanitizerError):
+        s.park(r)  # "new" -> waiting, but the request is already queued
+
+
+def test_wake_without_park_trips(sanitize):
+    s = Scheduler(num_slots=2, clock=lambda: 0.0)
+    r = req(prefix="task-b")
+    s.park(r)
+    s.wake("task-b")
+    with pytest.raises(SanitizerError):
+        # force a second wake of the same request object
+        s._waiting.setdefault("task-b", []).append(r)
+        s.wake("task-b")
+
+
+def test_sanitizer_off_scheduler_silent(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    s = Scheduler(num_slots=2, clock=lambda: 0.0)
+    r = req()
+    s.submit(r)
+    s.submit(r)  # double submit: bad, but unchecked without the flag
+    assert s.pending == 2

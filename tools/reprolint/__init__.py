@@ -1,0 +1,35 @@
+"""reprolint — repo-native static analysis for the MemCom serving stack.
+
+Usage::
+
+    python -m tools.reprolint src tests benchmarks
+
+Three rule families (see docs/LINTS.md for the full catalog):
+
+* ``jax``     — determinism hazards: wall-clock reads outside
+  serving/clock.py, global/unseeded RNG, python branches on traced
+  values inside jax.jit, host syncs in the decode loop, mutable default
+  args, jit over known-static config params.
+* ``serving`` — protocol checks: refcount balance over the block
+  allocator (all exit paths incl. PrefixSeatedError/OutOfBlocksError
+  edges), demote-hook-after-seated-guard, scheduler stage moves against
+  the machine-readable LEGAL_TRANSITIONS table.
+* ``kernels`` — pallas contracts: CompilerParams only via pltpu_compat,
+  BlockSpec index-map arity == grid rank (+ scalar prefetch), every
+  public kernel registered with a jnp reference twin.
+
+Importing this package registers every rule; the modules have no
+dependencies beyond the stdlib, so the linter runs before (and without)
+installing jax.
+"""
+
+from . import jax_rules, kernel_rules, serving_rules  # noqa: F401  (register)
+from .core import (  # noqa: F401
+    Baseline, BaselineError, Finding, Module, RULES, Rule, lint_file,
+    lint_source,
+)
+
+__all__ = [
+    "Baseline", "BaselineError", "Finding", "Module", "RULES", "Rule",
+    "lint_file", "lint_source",
+]

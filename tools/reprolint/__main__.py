@@ -1,0 +1,107 @@
+"""CLI: ``python -m tools.reprolint [paths...]``.
+
+Exits 0 when every finding is suppressed or baselined, 1 on new
+findings, 2 on usage/baseline-format errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import RULES
+from .core import Baseline, BaselineError, iter_py_files, lint_file
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="repo-native static analysis (jax determinism hazards, "
+                    "serving refcount/state-machine checks, pallas kernel "
+                    "contracts)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint "
+                         "(default: src tests benchmarks)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline JSON of grandfathered findings")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write all current findings to the baseline file "
+                         "(each entry still needs a hand-written "
+                         "justification before CI accepts it)")
+    ap.add_argument("--rule", action="append", dest="rules", default=None,
+                    metavar="RULE-ID", help="run only these rule ids")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also lint tests/lint_fixtures (deliberately "
+                         "violating files; excluded by default)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, r in sorted(RULES.items()):
+            print(f"{rid}  [{r.family}]")
+            print(f"    {r.description}")
+        return 0
+
+    if args.rules:
+        unknown = [r for r in args.rules if r not in RULES]
+        if unknown:
+            print(f"reprolint: unknown rule(s): {', '.join(unknown)}; "
+                  "see --list-rules", file=sys.stderr)
+            return 2
+
+    files = list(iter_py_files(args.paths,
+                               include_fixtures=args.include_fixtures))
+    if not files:
+        print(f"reprolint: no python files under {args.paths}",
+              file=sys.stderr)
+        return 2
+
+    findings = []
+    for f in files:
+        findings.extend(lint_file(f, rule_ids=args.rules))
+
+    if args.update_baseline:
+        Baseline.dump(findings, args.baseline)
+        print(f"reprolint: wrote {len(findings)} finding(s) to "
+              f"{args.baseline} — fill in every justification before "
+              "committing")
+        return 0
+
+    matched = 0
+    if not args.no_baseline:
+        try:
+            baseline = Baseline.load(args.baseline)
+        except BaselineError as e:
+            print(f"reprolint: bad baseline: {e}", file=sys.stderr)
+            return 2
+        except json.JSONDecodeError as e:
+            print(f"reprolint: baseline is not valid JSON: {e}",
+                  file=sys.stderr)
+            return 2
+        findings, matched = baseline.filter(findings)
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+
+    tail = f", {matched} baselined" if matched else ""
+    if findings:
+        print(f"\nreprolint: {len(findings)} new finding(s) across "
+              f"{len(files)} file(s){tail}", file=sys.stderr)
+        return 1
+    print(f"reprolint: clean — {len(files)} file(s){tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,331 @@
+"""reprolint core: rule registry, suppressions, baseline, file runner.
+
+The linter is deliberately dependency-free (stdlib ``ast`` + ``tokenize``
+only) so the CI static-analysis job can run it before installing jax, and
+a pre-commit hook stays fast.  Rules are small classes registered with
+:func:`rule`; each receives a parsed :class:`Module` and yields
+:class:`Finding`\\ s.
+
+Three escape hatches, in order of preference:
+
+1. **Fix the code.**  The rules encode repo invariants, not style.
+2. **Per-line suppression** — ``# reprolint: ignore[rule-id] -- reason``
+   on the flagged line or the line directly above it.  The reason is the
+   written justification; suppressions without one are themselves
+   findings (``bare-suppression``).
+3. **File-level suppression** — ``# reprolint: ignore-file[rule-id] --
+   reason`` anywhere in the file, for files whose *purpose* conflicts
+   with a rule (benchmarks measure wall time; wall time is banned in the
+   deterministic serving core).
+4. **Baseline** — ``tools/reprolint/baseline.json`` grandfathers known
+   findings (matched by rule + path + stripped source line, multiset
+   semantics so a *new* copy of an old finding still fails).  Every
+   baseline entry must carry a non-empty ``justification``.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Findings
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # posix path as given on the command line
+    line: int          # 1-based
+    message: str
+    context: str = ""  # stripped source line (baseline matching key)
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline matching key: stable across pure line-number shifts."""
+        return (self.rule, self.path, self.context)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Parsed module handed to rules
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*(ignore-file|ignore)"
+    r"(?:\[(?P<rules>[a-z0-9_,\- ]*)\])?"
+    r"(?:\s*--\s*(?P<reason>.*))?\s*$")
+
+
+@dataclass
+class Suppression:
+    line: int
+    rules: Optional[frozenset]  # None == all rules
+    reason: str
+    file_level: bool
+
+    def covers(self, rule_id: str) -> bool:
+        return self.rules is None or rule_id in self.rules
+
+
+@dataclass
+class Module:
+    path: str                  # as reported in findings
+    source: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+    suppressions: List[Suppression] = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, path: str, source: Optional[str] = None) -> "Module":
+        if source is None:
+            source = Path(path).read_text(encoding="utf-8")
+        tree = ast.parse(source, filename=path)
+        mod = cls(path=str(Path(path).as_posix()), source=source, tree=tree,
+                  lines=source.splitlines())
+        mod.suppressions = list(_scan_suppressions(source))
+        return mod
+
+    def context(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(rule=rule, path=self.path, line=line,
+                       message=message, context=self.context(line))
+
+    # ---- suppression queries ----
+
+    def suppressed(self, f: Finding) -> bool:
+        for s in self.suppressions:
+            if not s.covers(f.rule):
+                continue
+            if s.file_level or s.line in (f.line, f.line - 1):
+                return True
+        return False
+
+
+def _scan_suppressions(source: str) -> Iterable[Suppression]:
+    """Tokenize-based comment scan (robust to ``#`` inside strings)."""
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            rules = m.group("rules")
+            ids = (frozenset(r.strip() for r in rules.split(",") if r.strip())
+                   if rules is not None else None)
+            yield Suppression(
+                line=tok.start[0], rules=ids,
+                reason=(m.group("reason") or "").strip(),
+                file_level=m.group(1) == "ignore-file")
+    except tokenize.TokenError:  # unterminated string etc; ast will complain
+        return
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+RULES: Dict[str, "Rule"] = {}
+
+
+class Rule:
+    """One check.  Subclasses set ``id``/``family``/``description`` and
+    implement :meth:`check`, yielding findings for one module."""
+
+    id: str = ""
+    family: str = ""
+    description: str = ""
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, mod: Module) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def rule(cls):
+    """Class decorator registering a :class:`Rule` subclass."""
+    inst = cls()
+    assert inst.id and inst.id not in RULES, f"bad/duplicate rule id {cls}"
+    RULES[inst.id] = inst
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+class BaselineError(ValueError):
+    pass
+
+
+@dataclass
+class Baseline:
+    entries: List[dict] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text(encoding="utf-8"))
+        entries = data.get("findings", [])
+        for e in entries:
+            for field_name in ("rule", "path", "context"):
+                if field_name not in e:
+                    raise BaselineError(
+                        f"baseline entry missing {field_name!r}: {e}")
+            if not str(e.get("justification", "")).strip():
+                raise BaselineError(
+                    "baseline entry without a written justification: "
+                    f"{e['rule']} at {e['path']} — every grandfathered "
+                    "finding must say why it is acceptable")
+        return cls(entries=entries)
+
+    def filter(self, findings: List[Finding]) -> Tuple[List[Finding], int]:
+        """Remove baselined findings (multiset: each entry absorbs one
+        matching finding).  Returns (new_findings, matched_count)."""
+        budget: Dict[Tuple[str, str, str], int] = {}
+        for e in self.entries:
+            k = (e["rule"], e["path"], e["context"])
+            budget[k] = budget.get(k, 0) + 1
+        fresh, matched = [], 0
+        for f in findings:
+            k = f.key()
+            if budget.get(k, 0) > 0:
+                budget[k] -= 1
+                matched += 1
+            else:
+                fresh.append(f)
+        return fresh, matched
+
+    @staticmethod
+    def dump(findings: List[Finding], path: Path) -> None:
+        data = {
+            "comment": "reprolint baseline — grandfathered findings. Every "
+                       "entry needs a justification; prefer fixing the code "
+                       "or an inline '# reprolint: ignore[...] -- reason'.",
+            "findings": [
+                {"rule": f.rule, "path": f.path, "context": f.context,
+                 "justification": "TODO: justify or fix"}
+                for f in findings
+            ],
+        }
+        path.write_text(json.dumps(data, indent=2) + "\n", encoding="utf-8")
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "lint_fixtures"}
+
+
+def iter_py_files(paths: Iterable[str],
+                  include_fixtures: bool = False) -> Iterable[Path]:
+    skip = set(SKIP_DIRS)
+    if include_fixtures:
+        skip.discard("lint_fixtures")
+    for raw in paths:
+        p = Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not (set(f.parts) & skip):
+                    yield f
+
+
+def lint_source(path: str, source: str,
+                rule_ids: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one in-memory source blob (the unit tests' entry point)."""
+    mod = Module.parse(path, source)
+    return _run_rules(mod, rule_ids)
+
+
+def lint_file(path: Path,
+              rule_ids: Optional[Iterable[str]] = None) -> List[Finding]:
+    try:
+        mod = Module.parse(str(path))
+    except SyntaxError as e:
+        return [Finding(rule="parse-error", path=str(Path(path).as_posix()),
+                        line=e.lineno or 1, message=str(e))]
+    return _run_rules(mod, rule_ids)
+
+
+def _run_rules(mod: Module,
+               rule_ids: Optional[Iterable[str]] = None) -> List[Finding]:
+    active = ([RULES[r] for r in rule_ids] if rule_ids is not None
+              else list(RULES.values()))
+    out: List[Finding] = []
+    for r in active:
+        if not r.applies_to(mod.path):
+            continue
+        for f in r.check(mod):
+            if not mod.suppressed(f):
+                out.append(f)
+    out.extend(_check_suppression_hygiene(mod))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def _check_suppression_hygiene(mod: Module) -> List[Finding]:
+    """A suppression is a promise with a reason attached; one without a
+    reason (or naming no rule) silently rots."""
+    out = []
+    for s in mod.suppressions:
+        if not s.reason:
+            out.append(mod.finding(
+                "bare-suppression", s.line,
+                "suppression without a justification — write "
+                "'# reprolint: ignore[rule-id] -- why this is OK'"))
+        elif s.rules is None:
+            out.append(mod.finding(
+                "bare-suppression", s.line,
+                "blanket suppression — name the rule(s): "
+                "'# reprolint: ignore[rule-id] -- reason'"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by several rule modules
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression: ``a.b.c`` -> "a.b.c"."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def is_name_in(expr: ast.AST, names: set) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(expr))

@@ -1,0 +1,459 @@
+"""Rule family 1 — JAX / determinism hazards.
+
+The serving stack's headline guarantee is that a whole simulation is a
+pure function of (scenario, seed) on the injected virtual clock.  Every
+rule here bans a way that guarantee has been (or could be) broken:
+wall-clock reads outside ``serving/clock.py``, global/unseeded RNG,
+Python control flow on traced values inside jitted functions, host syncs
+in the decode loop, mutable default arguments, and ``jax.jit`` calls
+that trace known-static config params.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from .core import Finding, Module, Rule, call_kwarg, dotted, rule
+
+# ---------------------------------------------------------------------------
+# wall-clock
+# ---------------------------------------------------------------------------
+
+_WALL_CLOCK_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "time.monotonic_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+@rule
+class WallClockRule(Rule):
+    id = "wall-clock"
+    family = "jax"
+    description = (
+        "Direct wall-clock reads (time.time/perf_counter/monotonic, "
+        "datetime.now/utcnow/today) outside serving/clock.py.  The "
+        "serving stack reads time through the injected clock so a "
+        "simulation replays bit-identically; passing time.perf_counter "
+        "*as a callable default* is fine — calling it is not.")
+
+    def applies_to(self, path: str) -> bool:
+        return not path.endswith("serving/clock.py")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = dotted(node.func)
+                if name in _WALL_CLOCK_CALLS:
+                    yield mod.finding(
+                        self.id, node,
+                        f"wall-clock read {name}() — inject a clock "
+                        "(serving/clock.py) instead; timestamps must be a "
+                        "function of the work performed, not the host")
+
+
+# ---------------------------------------------------------------------------
+# unseeded-random
+# ---------------------------------------------------------------------------
+
+# legacy numpy global-state API (np.random.<fn> mutates a hidden global
+# RNG; any call order change changes every downstream draw)
+_NP_LEGACY = {
+    "seed", "random", "rand", "randn", "randint", "random_sample", "ranf",
+    "sample", "choice", "shuffle", "permutation", "uniform", "normal",
+    "standard_normal", "poisson", "exponential", "beta", "binomial",
+    "bytes", "gamma", "geometric", "integers",
+}
+# stdlib random module-level functions (same hidden global state)
+_PY_RANDOM = {
+    "seed", "random", "randint", "randrange", "choice", "choices",
+    "shuffle", "sample", "uniform", "gauss", "normalvariate", "betavariate",
+    "expovariate", "getrandbits", "triangular", "vonmisesvariate",
+}
+
+
+@rule
+class UnseededRandomRule(Rule):
+    id = "unseeded-random"
+    family = "jax"
+    description = (
+        "Global-state or unseeded RNG: legacy np.random.<fn>() calls, "
+        "stdlib random.<fn>() module functions, np.random.default_rng() "
+        "with no seed, or random.Random() with no seed.  Use "
+        "np.random.default_rng(seed) / random.Random(seed) and thread "
+        "the generator explicitly.")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if name.startswith(("np.random.", "numpy.random.")):
+                attr = name.rsplit(".", 1)[1]
+                if attr in _NP_LEGACY:
+                    yield mod.finding(
+                        self.id, node,
+                        f"legacy global-state RNG {name}() — use "
+                        "np.random.default_rng(seed) and pass the "
+                        "generator explicitly")
+                elif attr == "default_rng" and not node.args \
+                        and not node.keywords:
+                    yield mod.finding(
+                        self.id, node,
+                        "np.random.default_rng() with no seed draws OS "
+                        "entropy — results differ run to run")
+            elif name.rsplit(".", 1)[0] == "random" \
+                    and name.rsplit(".", 1)[1] in _PY_RANDOM:
+                yield mod.finding(
+                    self.id, node,
+                    f"stdlib global-state RNG {name}() — use "
+                    "random.Random(seed)")
+            elif name == "random.Random" and not node.args \
+                    and not node.keywords:
+                yield mod.finding(
+                    self.id, node,
+                    "random.Random() with no seed is nondeterministic")
+
+
+# ---------------------------------------------------------------------------
+# traced-branch
+# ---------------------------------------------------------------------------
+
+
+def _jit_static_names(call: ast.Call,
+                      fn: Optional[ast.FunctionDef]) -> Optional[Set[str]]:
+    """Parameter names a jax.jit call marks static.  ``call`` is the
+    ``jax.jit(...)`` / ``partial(jax.jit, ...)`` node; ``fn`` the wrapped
+    function when resolvable.  Returns None when the static set cannot be
+    determined statically (give up rather than false-positive)."""
+    names: Set[str] = set()
+    argnames = call_kwarg(call, "static_argnames")
+    if argnames is not None:
+        if isinstance(argnames, ast.Constant) and \
+                isinstance(argnames.value, str):
+            names.add(argnames.value)
+        elif isinstance(argnames, (ast.Tuple, ast.List)):
+            for elt in argnames.elts:
+                if isinstance(elt, ast.Constant) and \
+                        isinstance(elt.value, str):
+                    names.add(elt.value)
+                else:
+                    return None
+        else:
+            return None
+    argnums = call_kwarg(call, "static_argnums")
+    if argnums is not None:
+        if fn is None:
+            return None
+        positions = []
+        if isinstance(argnums, ast.Constant) and \
+                isinstance(argnums.value, int):
+            positions = [argnums.value]
+        elif isinstance(argnums, (ast.Tuple, ast.List)):
+            for elt in argnums.elts:
+                if isinstance(elt, ast.Constant) and \
+                        isinstance(elt.value, int):
+                    positions.append(elt.value)
+                else:
+                    return None
+        else:
+            return None
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        for pos in positions:
+            if 0 <= pos < len(params):
+                names.add(params[pos])
+    return names
+
+
+def _is_jax_jit(expr: ast.AST) -> Optional[ast.Call]:
+    """Return the jit-configuring Call for ``@jax.jit``-style decorators
+    and ``jax.jit(...)`` / ``[functools.]partial(jax.jit, ...)`` calls."""
+    if isinstance(expr, ast.Call):
+        name = dotted(expr.func)
+        if name in ("jax.jit", "jit"):
+            return expr
+        if name in ("functools.partial", "partial") and expr.args and \
+                dotted(expr.args[0]) in ("jax.jit", "jit"):
+            return expr
+    return None
+
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+_HOST_FNS = {"len", "isinstance", "hasattr", "getattr", "type"}
+
+
+class _TracedParamUse(ast.NodeVisitor):
+    """Does this expression use a (non-static) parameter as a *value*?
+
+    Shape/dtype attribute access and len()/isinstance() calls are
+    trace-time python — only genuine value uses count."""
+
+    def __init__(self, params: Set[str]):
+        self.params = params
+        self.hit: Optional[ast.Name] = None
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in _SHAPE_ATTRS:
+            return  # x.shape — static under tracing
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in _HOST_FNS:
+            return
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare):
+        # `x is None` / `x is not None` — python-level identity, fine
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if self.hit is None and node.id in self.params:
+            self.hit = node
+
+
+@rule
+class TracedBranchRule(Rule):
+    id = "traced-branch"
+    family = "jax"
+    description = (
+        "Python if/while/assert on a traced value inside a jax.jit'ed "
+        "function: the branch runs once at trace time on an abstract "
+        "tracer (ConcretizationTypeError at best, a silently baked-in "
+        "branch at worst).  Use lax.cond/lax.select, or mark the "
+        "argument static.")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        # pass 1: names wrapped via jax.jit(<name>, ...) calls
+        wrapped: dict = {}
+        for node in ast.walk(mod.tree):
+            call = _is_jax_jit(node)
+            if call is not None and call.args:
+                target = call.args[0]
+                if dotted(target) not in ("jax.jit", "jit") and \
+                        isinstance(target, ast.Name):
+                    wrapped[target.id] = call
+        # pass 2: every function that is jitted by decorator or wrapping
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            jit_call = None
+            for dec in fn.decorator_list:
+                jit_call = _is_jax_jit(dec)
+                if jit_call is None and dotted(dec) in ("jax.jit", "jit"):
+                    jit_call = ast.Call(func=dec, args=[], keywords=[])
+                if jit_call is not None:
+                    break
+            if jit_call is None:
+                jit_call = wrapped.get(fn.name)
+            if jit_call is None:
+                continue
+            static = _jit_static_names(jit_call, fn)
+            if static is None:
+                continue  # couldn't resolve the static set — stay quiet
+            params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)} - static
+            yield from self._scan_body(mod, fn, params)
+
+    def _scan_body(self, mod: Module, fn, params: Set[str]):
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue  # nested defs get their own jit analysis (if any)
+            tests: List[ast.expr] = []
+            kind = None
+            if isinstance(node, ast.If):
+                tests, kind = [node.test], "if"
+            elif isinstance(node, ast.While):
+                tests, kind = [node.test], "while"
+            elif isinstance(node, ast.Assert):
+                tests, kind = [node.test], "assert"
+            for test in tests:
+                probe = _TracedParamUse(params)
+                probe.visit(test)
+                if probe.hit is not None:
+                    yield mod.finding(
+                        self.id, node,
+                        f"python `{kind}` on traced parameter "
+                        f"{probe.hit.id!r} inside a jax.jit function — "
+                        "use lax.cond/lax.select or mark it static")
+
+
+# ---------------------------------------------------------------------------
+# host-sync-decode
+# ---------------------------------------------------------------------------
+
+_JIT_STEP_ATTRS = ("_decode", "_decode_greedy", "_prefill", "_fused",
+                   "_draft", "_program")
+
+
+@rule
+class HostSyncRule(Rule):
+    id = "host-sync-decode"
+    family = "jax"
+    description = (
+        "Host synchronization in the serving hot path: .item() on a "
+        "device array, or float()/int() wrapped directly around a jitted "
+        "step call.  Each sync stalls the dispatch pipeline once per "
+        "decode step; pull values to host once per batch via np.asarray "
+        "at the single sanctioned sync point.")
+
+    def applies_to(self, path: str) -> bool:
+        return "serving/" in path
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield mod.finding(
+                    self.id, node,
+                    ".item() forces a device→host sync per element — "
+                    "np.asarray the whole batch once instead")
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in ("float", "int") and node.args:
+                inner = node.args[0]
+                if isinstance(inner, ast.Call):
+                    name = dotted(inner.func)
+                    if any(name == f"self.{a}" for a in _JIT_STEP_ATTRS):
+                        yield mod.finding(
+                            self.id, node,
+                            f"{node.func.id}() directly on the jitted step "
+                            f"{name}() blocks on the device — keep the "
+                            "result async and sync once per step")
+
+
+# ---------------------------------------------------------------------------
+# mutable-default
+# ---------------------------------------------------------------------------
+
+_IMMUTABLE_CALLS = {"frozenset", "tuple", "object"}
+
+
+@rule
+class MutableDefaultRule(Rule):
+    id = "mutable-default"
+    family = "jax"
+    description = (
+        "Mutable default argument ([], {}, set(), np.array(...)): "
+        "evaluated once at def time and shared across calls — state "
+        "leaks between requests.  Default to None (or frozenset()/a "
+        "tuple) and construct inside the body.")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            defaults = list(fn.args.defaults) + \
+                [d for d in fn.args.kw_defaults if d is not None]
+            for d in defaults:
+                bad = None
+                if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                    bad = {ast.List: "[]", ast.Dict: "{}",
+                           ast.Set: "a set literal"}[type(d)]
+                elif isinstance(d, ast.Call):
+                    name = dotted(d.func)
+                    base = name.split(".")[-1]
+                    if base in ("list", "dict", "set", "defaultdict",
+                                "OrderedDict", "deque", "array", "zeros",
+                                "ones", "empty"):
+                        bad = f"{name}(...)"
+                if bad is not None:
+                    yield mod.finding(
+                        self.id, d,
+                        f"mutable default {bad} in {fn.name}() is shared "
+                        "across calls — default to None and build it in "
+                        "the body")
+
+
+# ---------------------------------------------------------------------------
+# jit-static-hint
+# ---------------------------------------------------------------------------
+
+# parameters that are always trace-static in this codebase: ModelConfig
+# dataclasses, meshes, and python-mode switches.  Tracing them either
+# crashes (unhashable) or silently retraces per call.
+_KNOWN_STATIC_PARAMS = {"cfg", "config", "dcfg", "mesh", "interpret",
+                        "causal", "kv_layout"}
+
+
+@rule
+class JitStaticHintRule(Rule):
+    id = "jit-static-hint"
+    family = "jax"
+    description = (
+        "jax.jit over a function taking a known-static config param "
+        "(cfg/config/mesh/interpret/...) without declaring it in "
+        "static_argnums/static_argnames — the call either fails on an "
+        "unhashable tracer or retraces every step.")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        fns = {f.name: f for f in ast.walk(mod.tree)
+               if isinstance(f, ast.FunctionDef)}
+        for node in ast.walk(mod.tree):
+            call = _is_jax_jit(node)
+            if call is None or not isinstance(node, ast.Call):
+                continue
+            # which function does this jit wrap?
+            fn = None
+            if call.args:
+                target = call.args[0]
+                if dotted(target) in ("jax.jit", "jit") and \
+                        len(call.args) > 1:
+                    target = call.args[1]
+                if isinstance(target, ast.Name):
+                    fn = fns.get(target.id)
+            if fn is None:
+                continue
+            static = _jit_static_names(call, fn)
+            if static is None:
+                continue
+            params = [a.arg for a in fn.args.posonlyargs + fn.args.args
+                      + fn.args.kwonlyargs]
+            missing = [p for p in params
+                       if p in _KNOWN_STATIC_PARAMS and p not in static]
+            for p in missing:
+                yield mod.finding(
+                    self.id, node,
+                    f"jax.jit({fn.name}) traces parameter {p!r} which is "
+                    "config-static — add it to static_argnames")
+
+
+# decorator form of jit-static-hint shares the implementation above via a
+# second scan: @jax.jit / @partial(jax.jit, ...) directly on a def.
+@rule
+class JitStaticHintDecoratorRule(Rule):
+    id = "jit-static-hint-decorator"
+    family = "jax"
+    description = (
+        "Decorator form of jit-static-hint: @jax.jit / "
+        "@functools.partial(jax.jit, ...) on a def whose signature has a "
+        "known-static config param not named in static_argnames.")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in fn.decorator_list:
+                call = _is_jax_jit(dec)
+                if call is None and dotted(dec) in ("jax.jit", "jit"):
+                    call = ast.Call(func=dec, args=[], keywords=[])
+                if call is None:
+                    continue
+                static = _jit_static_names(call, fn)
+                if static is None:
+                    continue
+                params = [a.arg for a in fn.args.posonlyargs + fn.args.args
+                          + fn.args.kwonlyargs]
+                for p in params:
+                    if p in _KNOWN_STATIC_PARAMS and p not in static:
+                        yield mod.finding(
+                            self.id, dec,
+                            f"@jax.jit on {fn.name}() traces parameter "
+                            f"{p!r} which is config-static — add it to "
+                            "static_argnames")

@@ -1,0 +1,268 @@
+"""Rule family 3 — pallas kernel contracts.
+
+Every kernel in ``src/repro/kernels/`` obeys three contracts:
+
+* compiler params come from the ``pltpu_compat`` shim, never from
+  ``pltpu.CompilerParams`` directly (the class was renamed across jax
+  releases; the shim is the one place that knows);
+* a ``BlockSpec`` index map takes exactly ``grid rank +
+  num_scalar_prefetch`` positional arguments — an arity mismatch
+  compiles on some jax versions and silently mis-tiles on others;
+* each public kernel entry point has a registered jnp reference twin
+  (``registry.REFERENCE_TWINS`` → a function in ``jnp_impl.py`` or
+  ``ref.py``) so parity tests always have an oracle.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .core import Finding, Module, Rule, call_kwarg, dotted, rule
+
+_NON_KERNEL_MODULES = {"__init__", "ops", "jnp_impl", "ref", "pltpu_compat",
+                       "registry"}
+
+
+def _in_kernels_dir(path: str) -> bool:
+    return Path(path).parent.name == "kernels"
+
+
+# ---------------------------------------------------------------------------
+# pltpu-compat
+# ---------------------------------------------------------------------------
+
+
+@rule
+class PltpuCompatRule(Rule):
+    id = "pltpu-compat"
+    family = "kernels"
+    description = (
+        "Kernels must import CompilerParams from "
+        "repro.kernels.pltpu_compat, never pltpu.CompilerParams / "
+        "pltpu.TPUCompilerParams directly — the class name changed "
+        "across jax releases and the shim is the single compatibility "
+        "point.")
+
+    def applies_to(self, path: str) -> bool:
+        return _in_kernels_dir(path) and \
+            Path(path).stem != "pltpu_compat"
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in ("CompilerParams", "TPUCompilerParams"):
+                recv = dotted(node.value)
+                if recv:  # pltpu.CompilerParams, tpu.TPUCompilerParams, ...
+                    yield mod.finding(
+                        self.id, node,
+                        f"direct {recv}.{node.attr} — import CompilerParams "
+                        "from repro.kernels.pltpu_compat (version shim)")
+            elif isinstance(node, ast.ImportFrom) and node.module and \
+                    "pallas" in node.module:
+                for alias in node.names:
+                    if alias.name in ("CompilerParams", "TPUCompilerParams"):
+                        yield mod.finding(
+                            self.id, node,
+                            f"from {node.module} import {alias.name} — "
+                            "import it from repro.kernels.pltpu_compat "
+                            "(version shim)")
+
+
+# ---------------------------------------------------------------------------
+# blockspec-arity
+# ---------------------------------------------------------------------------
+
+
+def _lambda_arity(lam: ast.Lambda) -> int:
+    """Positional parameters without defaults (defaults are trace-time
+    captures like ``rep=rep``, not grid indices)."""
+    args = lam.args
+    return len(args.posonlyargs) + len(args.args) - len(args.defaults)
+
+
+def _grid_rank(grid: ast.expr, fn: Optional[ast.AST]) -> Optional[int]:
+    """Rank of a grid expression: a literal tuple's length, resolving one
+    level of ``name = (...)`` indirection inside the enclosing function."""
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Name) and fn is not None:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    node.targets[0].id == grid.id and \
+                    isinstance(node.value, (ast.Tuple, ast.List)):
+                return len(node.value.elts)
+    return None
+
+
+@rule
+class BlockSpecArityRule(Rule):
+    id = "blockspec-arity"
+    family = "kernels"
+    description = (
+        "A BlockSpec index map must take grid-rank + num_scalar_prefetch "
+        "positional args (extra defaulted params are fine).  A mismatch "
+        "is a silent mis-tile on jax versions that don't validate it.")
+
+    def applies_to(self, path: str) -> bool:
+        return _in_kernels_dir(path)
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        # map each grid-bearing call to its enclosing function for name
+        # resolution
+        enclosing: Dict[ast.AST, ast.AST] = {}
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(fn):
+                    enclosing.setdefault(sub, fn)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func)
+            tail = callee.split(".")[-1]
+            if tail not in ("pallas_call", "PrefetchScalarGridSpec",
+                            "GridSpec"):
+                continue
+            grid = call_kwarg(node, "grid")
+            if grid is None:
+                continue
+            rank = _grid_rank(grid, enclosing.get(node))
+            if rank is None:
+                continue  # not statically resolvable — stay quiet
+            prefetch = 0
+            pf = call_kwarg(node, "num_scalar_prefetch")
+            if pf is not None:
+                if isinstance(pf, ast.Constant) and isinstance(pf.value, int):
+                    prefetch = pf.value
+                else:
+                    continue
+            want = rank + prefetch
+            for spec_kw in ("in_specs", "out_specs"):
+                specs = call_kwarg(node, spec_kw)
+                if specs is None:
+                    continue
+                spec_calls = [specs] if isinstance(specs, ast.Call) else (
+                    list(specs.elts)
+                    if isinstance(specs, (ast.List, ast.Tuple)) else [])
+                for spec in spec_calls:
+                    if not (isinstance(spec, ast.Call)
+                            and dotted(spec.func).endswith("BlockSpec")):
+                        continue
+                    lam = None
+                    if len(spec.args) >= 2 and \
+                            isinstance(spec.args[1], ast.Lambda):
+                        lam = spec.args[1]
+                    else:
+                        im = call_kwarg(spec, "index_map")
+                        if isinstance(im, ast.Lambda):
+                            lam = im
+                    if lam is None:
+                        continue
+                    got = _lambda_arity(lam)
+                    if got != want:
+                        yield mod.finding(
+                            self.id, lam,
+                            f"BlockSpec index map takes {got} positional "
+                            f"args but the grid supplies {want} "
+                            f"(rank {rank} + {prefetch} scalar-prefetch "
+                            "refs)")
+
+
+# ---------------------------------------------------------------------------
+# ref-twin
+# ---------------------------------------------------------------------------
+
+
+def _module_functions(path: Path) -> Optional[set]:
+    try:
+        tree = ast.parse(path.read_text(encoding="utf-8"))
+    except (OSError, SyntaxError):
+        return None
+    return {n.name for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _load_registry(kernels_dir: Path) -> Tuple[Optional[dict], Optional[str]]:
+    reg = kernels_dir / "registry.py"
+    if not reg.exists():
+        return None, f"no reference-twin registry at {reg.as_posix()}"
+    try:
+        tree = ast.parse(reg.read_text(encoding="utf-8"))
+    except SyntaxError as e:
+        return None, f"registry.py unparseable: {e}"
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                node.targets[0].id == "REFERENCE_TWINS":
+            try:
+                return ast.literal_eval(node.value), None
+            except (ValueError, SyntaxError):
+                return None, ("REFERENCE_TWINS must be a pure literal dict "
+                              "the linter can evaluate")
+    return None, "registry.py defines no REFERENCE_TWINS dict"
+
+
+@rule
+class RefTwinRule(Rule):
+    id = "ref-twin"
+    family = "kernels"
+    description = (
+        "Every public pallas kernel entry point needs a registered jnp "
+        "reference twin (REFERENCE_TWINS in kernels/registry.py pointing "
+        "at a function in jnp_impl.py or ref.py) so parity tests always "
+        "have an oracle — a kernel without an oracle is untestable.")
+
+    def applies_to(self, path: str) -> bool:
+        return _in_kernels_dir(path) and \
+            Path(path).stem not in _NON_KERNEL_MODULES
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        # only modules that actually build a pallas kernel
+        if not any(isinstance(n, ast.Call)
+                   and dotted(n.func).split(".")[-1] == "pallas_call"
+                   for n in ast.walk(mod.tree)):
+            return
+        kernels_dir = Path(mod.path).parent
+        modname = Path(mod.path).stem
+        registry, err = _load_registry(kernels_dir)
+        public = [n for n in mod.tree.body
+                  if isinstance(n, ast.FunctionDef)
+                  and not n.name.startswith("_")]
+        if registry is None:
+            if public:
+                yield mod.finding(self.id, public[0], err)
+            return
+        twin_fns: Dict[str, Optional[set]] = {}
+        for fn in public:
+            key = f"{modname}:{fn.name}"
+            twin = registry.get(key)
+            if twin is None:
+                yield mod.finding(
+                    self.id, fn,
+                    f"public kernel {key} has no REFERENCE_TWINS entry in "
+                    "kernels/registry.py — register its jnp oracle")
+                continue
+            try:
+                twin_mod, twin_fn = twin.split(":")
+            except (AttributeError, ValueError):
+                yield mod.finding(
+                    self.id, fn,
+                    f"REFERENCE_TWINS[{key!r}] = {twin!r} — expected "
+                    "'jnp_impl:<fn>' or 'ref:<fn>'")
+                continue
+            if twin_mod not in ("jnp_impl", "ref"):
+                yield mod.finding(
+                    self.id, fn,
+                    f"REFERENCE_TWINS[{key!r}] points at {twin_mod!r} — "
+                    "twins must live in jnp_impl.py or ref.py")
+                continue
+            if twin_mod not in twin_fns:
+                twin_fns[twin_mod] = _module_functions(
+                    kernels_dir / f"{twin_mod}.py")
+            fns = twin_fns[twin_mod]
+            if fns is not None and twin_fn not in fns:
+                yield mod.finding(
+                    self.id, fn,
+                    f"REFERENCE_TWINS[{key!r}] -> {twin!r} but "
+                    f"{twin_mod}.py defines no function {twin_fn!r}")

@@ -1,0 +1,483 @@
+"""Rule family 2 — serving protocol checks.
+
+The paged KV cache is correct only while three conventions hold (see
+``serving/block_pool.py`` invariants and docs/ARCHITECTURE.md):
+
+* every ``incref``/``alloc`` acquisition is matched by a ``decref`` or
+  ownership transfer (stored in a table/store/container) on **all** exit
+  paths, including the exception edges ``PrefixSeatedError`` and
+  ``OutOfBlocksError`` introduce;
+* a store's ``demote_hook`` only fires after the seated guard (the KV it
+  gathers out of the pool is trustworthy only while still referenced);
+* the scheduler only moves requests along the legal stage machine
+  declared in ``Scheduler``'s machine-readable ``LEGAL_TRANSITIONS``
+  table (the same table the ``REPRO_SANITIZE=1`` runtime sanitizer
+  enforces — the static and dynamic checker cross-validate each other).
+
+The refcount checker is an intra-procedural may-leak analysis: a linear
+symbolic walk over each function's statements (branch bodies walked
+independently, loop bodies once) tracking acquired block sets until they
+are released (``decref``) or escape (stored into an attribute/subscript/
+container, or returned).  A ``raise``, or a call into a known-raising
+API (``alloc``/``evict``/``put``/``put_row``/``_evict_lru``), while an
+acquisition is still held flags a leak on that exception edge — unless
+an enclosing ``try`` releases the acquisition in a handler or
+``finally``.  The analysis prefers false negatives over false positives;
+it is cross-validated by the runtime sanitizer.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .core import Finding, Module, Rule, dotted, rule
+
+def _is_serving_target(path: str) -> bool:
+    return Path(path).parent.name == "serving"
+
+
+# ---------------------------------------------------------------------------
+# refcount-balance
+# ---------------------------------------------------------------------------
+
+_ACQUIRE_ATTRS = {"alloc", "incref"}
+_RELEASE_ATTRS = {"decref"}
+_ESCAPE_METHODS = {"append", "extend", "insert", "add", "update"}
+# calls that can raise PrefixSeatedError / OutOfBlocksError mid-function:
+# an acquisition still held across one of these leaks on the exception edge
+_KNOWN_RAISERS = {"alloc", "evict", "put", "put_row", "_evict_lru",
+                  "_cow_block", "_prepare_prefill", "_seat_blocks"}
+
+
+@dataclass
+class _Acq:
+    name: str          # tracked variable (or source collection for incref)
+    line: int
+    kind: str          # "alloc" | "incref"
+
+
+class _FnState:
+    def __init__(self):
+        self.held: Dict[str, _Acq] = {}
+
+    def copy(self) -> "_FnState":
+        s = _FnState()
+        s.held = dict(self.held)
+        return s
+
+
+@rule
+class RefcountBalanceRule(Rule):
+    id = "refcount-balance"
+    family = "serving"
+    description = (
+        "Block acquisitions (BlockAllocator.alloc/incref) must be "
+        "released (decref) or transferred (stored into a block table, "
+        "store entry, or slot list) on every exit path — including the "
+        "exception edges PrefixSeatedError/OutOfBlocksError introduce.  "
+        "A held acquisition at a return, raise, or known-raising call "
+        "leaks pool blocks.")
+
+    def applies_to(self, path: str) -> bool:
+        return _is_serving_target(path)
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        # parent map for try-enclosure queries
+        parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(mod.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if self._has_acquisition(fn):
+                    yield from self._analyze(mod, fn, parents)
+
+    # ---- helpers ----
+
+    @staticmethod
+    def _call_attr(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            return node.func.attr
+        return None
+
+    def _has_acquisition(self, fn) -> bool:
+        for node in ast.walk(fn):
+            if self._call_attr(node) in _ACQUIRE_ATTRS:
+                # `.alloc(` on an allocator-ish receiver only — skip e.g.
+                # unrelated .alloc attrs by requiring the receiver name
+                # to mention alloc, or the call to be .incref
+                if self._is_acquire(node):
+                    return True
+        return False
+
+    def _is_acquire(self, node: ast.Call) -> bool:
+        attr = self._call_attr(node)
+        if attr == "incref":
+            return True
+        if attr == "alloc":
+            recv = dotted(node.func.value)
+            return "alloc" in recv.split(".")[-1]
+        return False
+
+    # ---- the walk ----
+
+    def _analyze(self, mod: Module, fn, parents) -> Iterable[Finding]:
+        self._findings: List[Finding] = []
+        self._mod = mod
+        self._parents = parents
+        # map incref loop-vars to their source collection
+        self._loop_src: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.For) and isinstance(node.target, ast.Name) \
+                    and isinstance(node.iter, ast.Name):
+                self._loop_src[node.target.id] = node.iter.id
+        state = _FnState()
+        self._walk(fn.body, state)
+        self._flag_held(state, fn.body[-1].lineno if fn.body else fn.lineno,
+                        "function exit")
+        return self._findings
+
+    def _flag_held(self, state: _FnState, line: int, where: str) -> None:
+        for acq in state.held.values():
+            self._findings.append(self._mod.finding(
+                "refcount-balance", line,
+                f"block refs acquired at line {acq.line} "
+                f"({acq.kind} -> {acq.name!r}) are still held at {where} "
+                "— decref them or store them in an owning structure"))
+        state.held.clear()
+
+    def _walk(self, stmts: List[ast.stmt], state: _FnState) -> bool:
+        """Walk a statement list; returns False when the block always
+        terminates (return/raise) before falling through."""
+        for stmt in stmts:
+            if isinstance(stmt, ast.Return):
+                if stmt.value is not None:
+                    self._mark_escapes_in(stmt.value, state)
+                self._flag_held(state, stmt.lineno, "return")
+                return False
+            if isinstance(stmt, ast.Raise):
+                if state.held and not self._released_by_enclosing_try(
+                        stmt, state):
+                    self._flag_held(state, stmt.lineno, "raise")
+                return False
+            if isinstance(stmt, ast.If):
+                s_body, s_else = state.copy(), state.copy()
+                ft_body = self._walk(stmt.body, s_body)
+                ft_else = self._walk(stmt.orelse, s_else)
+                merged: Dict[str, _Acq] = {}
+                if ft_body:
+                    merged.update(s_body.held)
+                if ft_else:
+                    merged.update(s_else.held)
+                state.held = merged
+                if not ft_body and not ft_else:
+                    return False
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                if isinstance(stmt, ast.For):
+                    self._scan_dangers(stmt.iter, state)
+                else:
+                    self._scan_dangers(stmt.test, state)
+                body_state = state.copy()
+                self._walk(stmt.body, body_state)
+                self._walk(stmt.orelse, body_state)
+                state.held = dict(body_state.held)
+                continue
+            if isinstance(stmt, ast.Try):
+                # conservative: treat handlers/finally as alternate exits;
+                # dangers inside the body consult the handlers for releases
+                body_state = state.copy()
+                ft = self._walk(stmt.body, body_state)
+                for h in stmt.handlers:
+                    self._walk(h.body, state.copy())
+                if stmt.finalbody:
+                    self._walk(stmt.finalbody, body_state)
+                state.held = dict(body_state.held)
+                if not ft and not stmt.finalbody:
+                    return False
+                continue
+            if isinstance(stmt, ast.With):
+                self._walk(stmt.body, state)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested defs analyzed on their own
+            self._linear(stmt, state)
+        return True
+
+    # ---- one non-branching statement ----
+
+    def _linear(self, stmt: ast.stmt, state: _FnState) -> None:
+        self._scan_dangers(stmt, state)
+        # releases first (decref(x) while x held)
+        for node in ast.walk(stmt):
+            attr = self._call_attr(node)
+            if attr in _RELEASE_ATTRS:
+                for arg in node.args:
+                    self._release_names_in(arg, state)
+            elif attr in _ESCAPE_METHODS:
+                for arg in node.args:
+                    self._mark_escapes_in(arg, state)
+        # acquisitions + escapes via assignment
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            value = stmt.value
+            escape_target = any(
+                isinstance(t, (ast.Attribute, ast.Subscript))
+                or isinstance(t, (ast.Tuple, ast.List)) and any(
+                    isinstance(e, (ast.Attribute, ast.Subscript))
+                    for e in t.elts)
+                for t in targets)
+            acq = self._find_acquire(value) if value is not None else None
+            if acq is not None:
+                if escape_target:
+                    pass  # acquired straight into an owning structure
+                else:
+                    tname = self._simple_target(targets)
+                    if tname is not None:
+                        state.held[tname] = _Acq(tname, stmt.lineno,
+                                                 self._call_attr(acq))
+                    # tuple-unpack etc: give up tracking (may-miss)
+            elif value is not None and escape_target:
+                self._mark_escapes_in(value, state)
+        elif isinstance(stmt, ast.Expr):
+            acq = self._find_acquire(stmt.value)
+            if acq is not None:
+                attr = self._call_attr(acq)
+                if attr == "incref":
+                    name = self._incref_tracked_name(acq)
+                    if name is not None:
+                        state.held[name] = _Acq(name, stmt.lineno, "incref")
+                else:
+                    self._findings.append(self._mod.finding(
+                        "refcount-balance", stmt.lineno,
+                        "alloc() result discarded — the blocks can never "
+                        "be released"))
+
+    def _scan_dangers(self, node: ast.AST, state: _FnState) -> None:
+        if not state.held:
+            return
+        for sub in ast.walk(node):
+            attr = self._call_attr(sub)
+            if attr in _KNOWN_RAISERS and not self._is_acquire(sub):
+                if not self._released_by_enclosing_try(sub, state):
+                    for acq in list(state.held.values()):
+                        self._findings.append(self._mod.finding(
+                            "refcount-balance", sub.lineno,
+                            f"call to .{attr}() may raise "
+                            "(PrefixSeatedError/OutOfBlocksError) while "
+                            f"block refs from line {acq.line} are still "
+                            f"held ({acq.name!r}) — release them first or "
+                            "wrap in try/finally"))
+                    state.held.clear()  # one report per hazard
+
+    def _released_by_enclosing_try(self, node: ast.AST,
+                                   state: _FnState) -> bool:
+        """True when an enclosing ``try`` textually decrefs a held name in
+        a handler or ``finally`` — the exception edge is then covered."""
+        held = set(state.held)
+        cur = self._parents.get(node)
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if isinstance(cur, ast.Try):
+                cleanup: List[ast.stmt] = list(cur.finalbody)
+                for h in cur.handlers:
+                    cleanup.extend(h.body)
+                for sub in ast.walk(ast.Module(body=cleanup,
+                                               type_ignores=[])):
+                    if self._call_attr(sub) in _RELEASE_ATTRS and any(
+                            isinstance(n, ast.Name)
+                            and self._loop_src.get(n.id, n.id) in held
+                            for a in sub.args for n in ast.walk(a)):
+                        return True
+            cur = self._parents.get(cur)
+        return False
+
+    def _find_acquire(self, expr: ast.AST) -> Optional[ast.Call]:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call) and self._is_acquire(node):
+                return node
+        return None
+
+    def _simple_target(self, targets) -> Optional[str]:
+        if len(targets) == 1 and isinstance(targets[0], ast.Name):
+            return targets[0].id
+        return None
+
+    def _incref_tracked_name(self, call: ast.Call) -> Optional[str]:
+        if call.args and isinstance(call.args[0], ast.Name):
+            var = call.args[0].id
+            # incref(b) in `for b in blocks:` really acquires into `blocks`
+            return self._loop_src.get(var, var)
+        return None
+
+    def _release_names_in(self, expr: ast.AST, state: _FnState) -> None:
+        # decref(b) inside `for b in blocks:` releases `blocks` itself
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name):
+                name = self._loop_src.get(n.id, n.id)
+                if name in state.held:
+                    del state.held[name]
+
+    def _mark_escapes_in(self, expr: ast.AST, state: _FnState) -> None:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in state.held:
+                del state.held[n.id]
+
+
+# ---------------------------------------------------------------------------
+# demote-guard
+# ---------------------------------------------------------------------------
+
+
+@rule
+class DemoteGuardRule(Rule):
+    id = "demote-guard"
+    family = "serving"
+    description = (
+        "A store's demote_hook must only fire after the seated guard: "
+        "the hook gathers an evicted prefix's KV back out of the pool, "
+        "which is only trustworthy while the blocks are still "
+        "referenced.  Any demote_hook(...) call needs a preceding "
+        "seated-check (raise PrefixSeatedError / a *seated* call) in the "
+        "same function.")
+
+    def applies_to(self, path: str) -> bool:
+        return _is_serving_target(path)
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            hook_calls = [
+                n for n in ast.walk(fn)
+                if isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "demote_hook"
+            ]
+            if not hook_calls:
+                continue
+            guard_lines = []
+            for n in ast.walk(fn):
+                if isinstance(n, ast.Raise) and n.exc is not None and \
+                        "PrefixSeatedError" in ast.dump(n.exc):
+                    guard_lines.append(n.lineno)
+                elif isinstance(n, ast.Call):
+                    name = dotted(n.func)
+                    if "seated" in name.split(".")[-1].lower():
+                        guard_lines.append(n.lineno)
+            for call in hook_calls:
+                if not any(g < call.lineno for g in guard_lines):
+                    yield mod.finding(
+                        self.id, call,
+                        "demote_hook() invoked without a preceding seated "
+                        "guard — an evicted-but-seated prefix would gather "
+                        "KV out of blocks another slot may rewrite")
+
+
+# ---------------------------------------------------------------------------
+# state-machine
+# ---------------------------------------------------------------------------
+
+# scheduler methods that move a request between stages; each must declare
+# its move through the _transition() hook so the static table check and
+# the runtime sanitizer see the same edges
+_TRANSITION_METHODS = ("submit", "park", "wake", "admit", "preempt", "finish")
+
+
+@rule
+class StateMachineRule(Rule):
+    id = "state-machine"
+    family = "serving"
+    description = (
+        "Scheduler stage moves must follow the machine-readable "
+        "STAGES/LEGAL_TRANSITIONS table: every _transition(src, dst) "
+        "call site must name a legal edge, and every stage-moving method "
+        "(submit/park/wake/admit/preempt/finish) must record its move "
+        "through _transition() so the REPRO_SANITIZE runtime check sees "
+        "the same machine the linter does.")
+
+    def applies_to(self, path: str) -> bool:
+        return Path(path).name == "scheduler.py"
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        stages, table, table_node = None, None, None
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                try:
+                    if name == "STAGES":
+                        stages = ast.literal_eval(node.value)
+                    elif name == "LEGAL_TRANSITIONS":
+                        table = ast.literal_eval(node.value)
+                        table_node = node
+                except (ValueError, SyntaxError):
+                    yield mod.finding(
+                        self.id, node,
+                        f"{name} must be a pure literal the linter can "
+                        "evaluate (no computed values)")
+                    return
+        sched = next((n for n in ast.walk(mod.tree)
+                      if isinstance(n, ast.ClassDef)
+                      and n.name == "Scheduler"), None)
+        if sched is None:
+            return
+        if stages is None or table is None:
+            yield mod.finding(
+                self.id, sched,
+                "scheduler.py must declare module-level STAGES and "
+                "LEGAL_TRANSITIONS literals — the machine-readable stage "
+                "table the linter and the runtime sanitizer both check")
+            return
+        table = {tuple(t) for t in table}
+        for src, dst in sorted(table):
+            if src not in stages or dst not in stages:
+                yield mod.finding(
+                    self.id, table_node,
+                    f"transition ({src!r}, {dst!r}) names a stage missing "
+                    f"from STAGES {tuple(stages)}")
+        # every _transition("a", "b") literal pair must be a legal edge
+        methods = {n.name: n for n in sched.body
+                   if isinstance(n, ast.FunctionDef)}
+        for fn in methods.values():
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "_transition"):
+                    continue
+                lits = [a.value for a in node.args
+                        if isinstance(a, ast.Constant)
+                        and isinstance(a.value, str)]
+                if len(lits) < 2:
+                    yield mod.finding(
+                        self.id, node,
+                        "_transition() must name its (src, dst) stages as "
+                        "string literals so the edge is statically "
+                        "checkable")
+                    continue
+                src, dst = lits[0], lits[1]
+                if (src, dst) not in table:
+                    yield mod.finding(
+                        self.id, node,
+                        f"illegal stage transition ({src!r} -> {dst!r}) — "
+                        "not an edge in LEGAL_TRANSITIONS")
+        # every stage-moving method must record its move
+        for name in _TRANSITION_METHODS:
+            fn = methods.get(name)
+            if fn is None:
+                continue
+            has = any(isinstance(n, ast.Call)
+                      and isinstance(n.func, ast.Attribute)
+                      and n.func.attr == "_transition"
+                      for n in ast.walk(fn))
+            if not has:
+                yield mod.finding(
+                    self.id, fn,
+                    f"Scheduler.{name}() moves requests between stages "
+                    "but never records the move via _transition() — the "
+                    "sanitizer and the linter cannot see this edge")
