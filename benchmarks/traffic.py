@@ -33,6 +33,7 @@ its ``traffic`` key.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import shutil
 import tempfile
@@ -43,8 +44,9 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import memcom
 from repro.models import transformer as tfm
-from repro.serving import MetricsRegistry, ServingEngine, Tracer, \
-    TrafficConfig, VirtualClock, generate_trace, slo_metrics
+from repro.serving import MetricsRegistry, ServingEngine, SLOWatchdog, \
+    ShedDegrade, Tracer, TrafficConfig, VirtualClock, default_rules, \
+    generate_trace, profile_spans, slo_metrics
 
 
 def scenario(smoke: bool, *, process: str = "poisson",
@@ -73,7 +75,8 @@ def scenario(smoke: bool, *, process: str = "poisson",
 def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
                 compile_token_budget: int, promote_layer_budget: int,
                 prefix_capacity: int, host_capacity: int,
-                slo_ttft_s: float, tracer=None, metrics=None) -> dict:
+                slo_ttft_s: float, tracer=None, metrics=None,
+                watchdog=None) -> dict:
     """One engine lifetime over the trace.  Fresh temp disk dir per run:
     a persistent one would carry spilled shards into the next run and
     break the same-seed determinism the section advertises."""
@@ -89,7 +92,7 @@ def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
         autotune_budgets=autotune,
         target_decode_gap_s=2e-3 if autotune else None,
         autotune_interval=8,
-        tracer=tracer, metrics=metrics)
+        tracer=tracer, metrics=metrics, watchdog=watchdog)
     try:
         t0 = time.perf_counter()
         engine.serve(list(trace.requests))
@@ -107,6 +110,9 @@ def _serve_once(cfg, target, mc, m, trace, *, slots, autotune: bool,
     assert ts["demotes"] > 0, "traffic scenario fired no tier demotions"
     out.update({
         "wall_s": wall_s,
+        "decode_steps": es["decode_steps"],
+        "tokens_per_step": (es["tokens_generated"]
+                            / max(es["decode_steps"], 1)),
         "compiles": cs["jobs"],
         "demotes": ts["demotes"], "spills": ts["spills"],
         "promotes": ts["host_promotes"],
@@ -146,11 +152,18 @@ def run_traffic(cfg, target, mc, m, rng, *, smoke: bool = False,
     # the virtual clock — the dumped JSON is byte-identical per seed.
     tracer = Tracer()
     registry = MetricsRegistry()
+    # SLO watchdog rides the fixed run too: burn-rate alerts land as
+    # tracer instants + serving_alerts_total counters, and the alert log
+    # is a pure function of (scenario, seed) on the virtual clock
+    watchdog = SLOWatchdog(default_rules(slo_ttft_s=slo_ttft_s),
+                           metrics=registry, tracer=tracer,
+                           degrade_hook=ShedDegrade())
     rows = []
     for mode, autotune in (("fixed", False), ("autotuned", True)):
         r = _serve_once(cfg, target, mc, m, trace, autotune=autotune,
                         tracer=tracer if mode == "fixed" else None,
                         metrics=registry if mode == "fixed" else None,
+                        watchdog=watchdog if mode == "fixed" else None,
                         **sizing)
         out[mode] = r
         fb = r["final_budgets"]
@@ -179,11 +192,28 @@ def run_traffic(cfg, target, mc, m, rng, *, smoke: bool = False,
     prom_path = os.path.join(C.ROOT, "traffic_metrics.prom")
     with open(prom_path, "w") as fh:
         fh.write(registry.render_prometheus())
+    # per-phase self-time attribution + the alert log, both schema'd
+    # artifacts the perf gate and validate_trace consume
+    profile = profile_spans(tracer.chrome_trace())
+    profile_path = os.path.join(C.ROOT, "traffic_profile.json")
+    with open(profile_path, "w") as fh:
+        json.dump(profile, fh, sort_keys=True, indent=1)
+    alerts_path = os.path.join(C.ROOT, "traffic_alerts.json")
+    with open(alerts_path, "w") as fh:
+        fh.write(watchdog.dumps())
+    out["profile"] = profile
+    out["alerts"] = {"fires": sum(1 for e in watchdog.alert_log
+                                  if e["kind"] == "fire"),
+                     "clears": sum(1 for e in watchdog.alert_log
+                                   if e["kind"] == "clear")}
     out["artifacts"] = {"trace": trace_path, "metrics": prom_path,
+                        "profile": profile_path, "alerts": alerts_path,
                         "trace_events": len(tracer.events()),
                         "dropped_events": tracer.dropped}
     print(f"traffic: wrote {trace_path} "
-          f"({out['artifacts']['trace_events']} events) and {prom_path}\n")
+          f"({out['artifacts']['trace_events']} events), {prom_path}, "
+          f"{profile_path} and {alerts_path} "
+          f"({out['alerts']['fires']} alert fires)\n")
     return out
 
 

@@ -1,26 +1,37 @@
-"""Schema-validate a Chrome-trace JSON dumped by the serving Tracer.
+"""Schema-validate serving observability artifacts (one CLI, three kinds).
 
-CI runs this against the smoke bench's ``traffic_trace.json`` artifact
-so a malformed dump (missing ``ph``/``ts``/``dur`` fields, broken async
-pairing metadata, or a lifecycle span that silently stopped being
-emitted) fails the build instead of shipping an artifact Perfetto cannot
-load.  The checks are the same ones ``repro.serving.validate_chrome_trace``
-exposes to tests:
+CI runs this against the smoke bench's dumps so a malformed artifact
+fails the build instead of shipping something Perfetto / the perf gate
+cannot load.  Three artifact kinds share the CLI, each validated by the
+same helper its producer exposes to tests:
 
-* every event carries ``ph``, ``pid``, ``tid`` and ``name``;
-* non-metadata events carry ``ts``; complete events (``ph == "X"``)
-  carry ``dur``; async begin/end events carry ``id``;
-* every span name in ``--require`` (default: the tracer's
-  ``REQUIRED_SPANS`` — the full request lifecycle from admission through
-  preempt/resume) appears at least once.
+* ``trace`` — a Chrome-trace JSON from the flight-recorder
+  :class:`~repro.serving.telemetry.Tracer`
+  (``repro.serving.validate_chrome_trace``): every event carries
+  ``ph``/``pid``/``tid``/``name``, non-metadata events carry ``ts``,
+  complete spans carry ``dur``, async begin/end carry ``id``, and every
+  span in ``--require`` appears at least once.
+* ``profile`` — a ``repro/profile-report/v1`` from
+  :func:`repro.serving.profile_spans`
+  (``repro.serving.validate_profile_report``): per-phase span counts and
+  non-negative total/self times with self ≤ total.
+* ``alerts`` — a ``repro/alert-log/v1`` from
+  :class:`repro.serving.SLOWatchdog`
+  (``repro.serving.validate_alert_log``): monotonic timestamps, legal
+  fire/clear sequencing per rule, known severities.
+
+``--kind auto`` (the default) sniffs the document: an explicit
+``schema`` field selects profile/alerts, anything else is a trace.
 
 Usage::
 
     python -m benchmarks.validate_trace artifacts/bench/traffic_trace.json
     python -m benchmarks.validate_trace trace.json --require admission,finish
+    python -m benchmarks.validate_trace artifacts/bench/traffic_profile.json
+    python -m benchmarks.validate_trace artifacts/bench/traffic_alerts.json
 
-Exits 0 when the trace is well-formed, 1 with one error per line on
-stderr otherwise.
+Exits 0 when the artifact is well-formed, 1 with one error per line on
+stderr otherwise (2 for an unreadable file or unknown kind).
 """
 
 from __future__ import annotations
@@ -29,29 +40,66 @@ import argparse
 import json
 import sys
 
+from repro.serving.profiler import (PROFILE_REPORT_SCHEMA,
+                                    validate_profile_report)
+from repro.serving.slo_watchdog import ALERT_LOG_SCHEMA, validate_alert_log
 from repro.serving.telemetry import REQUIRED_SPANS, validate_chrome_trace
+
+
+def sniff_kind(doc: dict) -> str:
+    schema = doc.get("schema")
+    if schema == PROFILE_REPORT_SCHEMA:
+        return "profile"
+    if schema == ALERT_LOG_SCHEMA:
+        return "alerts"
+    return "trace"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("trace", help="path to a Chrome-trace JSON dump")
+    ap.add_argument("trace", help="path to an artifact JSON dump")
+    ap.add_argument("--kind", default="auto",
+                    choices=("auto", "trace", "profile", "alerts"),
+                    help="artifact kind (default: sniff the 'schema' "
+                         "field; no field = Chrome trace)")
     ap.add_argument("--require", default=",".join(REQUIRED_SPANS),
-                    help="comma-separated span names that must appear "
-                         "(default: the tracer's REQUIRED_SPANS; pass '' "
-                         "to check structure only)")
+                    help="trace kind only: comma-separated span names "
+                         "that must appear (default: the tracer's "
+                         "REQUIRED_SPANS; pass '' to check structure "
+                         "only)")
     args = ap.parse_args(argv)
 
-    with open(args.trace) as fh:
-        trace = json.load(fh)
-    require = tuple(s for s in args.require.split(",") if s)
-    errors = validate_chrome_trace(trace, require_spans=require)
+    try:
+        with open(args.trace) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        print(f"validate_trace: cannot read {args.trace!r}: {e}",
+              file=sys.stderr)
+        return 2
+    kind = sniff_kind(doc) if args.kind == "auto" else args.kind
+
+    if kind == "trace":
+        require = tuple(s for s in args.require.split(",") if s)
+        errors = validate_chrome_trace(doc, require_spans=require)
+        detail = (f"{sum(1 for e in doc.get('traceEvents', ()) if e.get('ph') != 'M')} "
+                  f"events, {len(require)} required span(s) present")
+    elif kind == "profile":
+        errors = validate_profile_report(doc)
+        phases = doc.get("phases", {}) if isinstance(doc, dict) else {}
+        detail = (f"{sum(st.get('spans', 0) for st in phases.values() if isinstance(st, dict))} "
+                  f"spans over {len(phases)} phases, "
+                  f"wall {doc.get('wall_s', 0.0)}s")
+    else:  # alerts
+        errors = validate_alert_log(doc)
+        events = doc.get("events", []) if isinstance(doc, dict) else []
+        detail = (f"{len(events)} alert events over "
+                  f"{len(doc.get('rules', []))} rules")
+
     if errors:
         for err in errors:
-            print(f"validate_trace: {err}", file=sys.stderr)
+            print(f"validate_trace[{kind}]: {err}", file=sys.stderr)
         return 1
-    n = sum(1 for e in trace.get("traceEvents", ()) if e.get("ph") != "M")
-    print(f"validate_trace: OK — {n} events, "
-          f"{len(require)} required span(s) present")
+    print(f"validate_trace[{kind}]: OK — {detail}")
     return 0
 
 

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# HTTP telemetry-plane smoke: start the launcher with --http-port 0
+# (ephemeral) and --http-linger, parse the bound port from its stdout,
+# curl /metrics and /healthz, and schema-validate the /debug/trace dump
+# with benchmarks/validate_trace.py.  Used by CI's `tests` job; runnable
+# locally the same way:
+#
+#   PYTHONPATH=src scripts/http_smoke.sh
+set -euo pipefail
+
+OUT=${BENCH_ROOT:-artifacts/bench}
+LOG=$(mktemp /tmp/http-smoke.XXXXXX.log)
+mkdir -p "$OUT"
+
+PYTHONPATH=${PYTHONPATH:-src} python -m repro.launch.serve \
+    --arch smollm-135m --smoke \
+    --traffic zipf --priority-classes 2 --traffic-requests 24 \
+    --traffic-tasks 6 --traffic-rate 300 --context-tokens 24 --slots 2 \
+    --prefix-capacity 2 --host-capacity 2 \
+    --compile-budget 8 --promote-budget 1 --priority-aging 0.05 \
+    --http-port 0 --http-linger 60 >"$LOG" 2>&1 &
+PID=$!
+trap 'kill $PID 2>/dev/null || true' EXIT
+
+# the launcher prints "[edge] http telemetry on 127.0.0.1:PORT (...)"
+# as soon as the server binds — before the traffic run starts
+PORT=""
+for _ in $(seq 1 120); do
+    PORT=$(sed -n 's/^\[edge\] http telemetry on 127\.0\.0\.1:\([0-9]*\).*/\1/p' "$LOG" | head -1)
+    [ -n "$PORT" ] && break
+    kill -0 $PID 2>/dev/null || { echo "launcher died:"; cat "$LOG"; exit 1; }
+    sleep 1
+done
+[ -n "$PORT" ] && echo "http_smoke: telemetry plane on port $PORT" || {
+    echo "http_smoke: no bound-port line in launcher output"; cat "$LOG"; exit 1; }
+
+# wait for the linger window: the run is finished, state is final
+until grep -q "http telemetry lingering" "$LOG"; do
+    kill -0 $PID 2>/dev/null || { echo "launcher died:"; cat "$LOG"; exit 1; }
+    sleep 1
+done
+
+METRICS=$(curl -sf "http://127.0.0.1:$PORT/metrics")
+echo "$METRICS" | grep -q "^# TYPE serving_alerts_total counter" || {
+    echo "http_smoke: /metrics missing serving_alerts_total"; exit 1; }
+echo "$METRICS" | grep -q "serving_engine_decode_steps" || {
+    echo "http_smoke: /metrics missing engine counters"; exit 1; }
+echo "http_smoke: /metrics OK ($(echo "$METRICS" | wc -l) lines)"
+
+HEALTH=$(curl -sf "http://127.0.0.1:$PORT/healthz")
+echo "$HEALTH" | python -c 'import json,sys; d=json.load(sys.stdin); assert d["status"]=="ok" and d["slots"]>0, d; print("http_smoke: /healthz OK —", d["status"])'
+
+curl -sf "http://127.0.0.1:$PORT/debug/state" | python -c 'import json,sys; d=json.load(sys.stdin); assert d["engine"]["decode_steps"]>0, d; print("http_smoke: /debug/state OK")'
+
+curl -sf "http://127.0.0.1:$PORT/debug/trace" > "$OUT/http_trace.json"
+PYTHONPATH=${PYTHONPATH:-src} python -m benchmarks.validate_trace "$OUT/http_trace.json"
+
+kill $PID 2>/dev/null || true
+wait $PID 2>/dev/null || true
+trap - EXIT
+echo "http_smoke: PASS"

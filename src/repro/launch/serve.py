@@ -247,6 +247,16 @@ def main():
                     default="baseline",
                     help="weight-sharding rule set for --mesh (baseline: "
                          "tensor/expert parallel; fsdp: +embed over data)")
+    ap.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                    help="serve the telemetry plane over HTTP while the "
+                         "engine runs: GET /metrics (Prometheus text), "
+                         "/healthz, /debug/state, /debug/trace on "
+                         "127.0.0.1:PORT (0 = pick an ephemeral port, "
+                         "printed at startup)")
+    ap.add_argument("--http-linger", type=float, default=0.0, metavar="S",
+                    help="keep the process (and --http-port server) alive "
+                         "S seconds after serving finishes, so external "
+                         "scrapers/smoke tests can curl the final state")
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record a full request-lifecycle trace and write "
@@ -293,6 +303,12 @@ def main():
     if args.spec_draft is not None and args.spec_draft != "self" \
             and args.spec_draft not in ARCH_IDS:
         ap.error(f"--spec-draft must be 'self' or one of {ARCH_IDS}")
+    if args.http_port is not None and args.http_port < 0:
+        ap.error("--http-port must be >= 0 (0 picks an ephemeral port)")
+    if args.http_linger < 0:
+        ap.error("--http-linger must be >= 0")
+    if args.http_linger and args.http_port is None:
+        ap.error("--http-linger needs --http-port")
 
     vocab = SyntheticVocab()
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -343,17 +359,33 @@ def main():
 
         clock = VirtualClock()
     tracer = None
-    if args.trace_out or args.flight_recorder:
+    if args.trace_out or args.flight_recorder or args.http_port is not None:
         from repro.serving import Tracer
 
         # the tracer binds to the engine's clock at construction, so on
-        # a --traffic run the spans sit on simulated time
+        # a --traffic run the spans sit on simulated time; --http-port
+        # implies one so GET /debug/trace has a flight recorder to dump
         tracer = Tracer(capacity=args.flight_recorder,
                         dump_path=args.trace_out)
         print(f"[edge] tracing: flight recorder "
               f"{'unbounded' if args.flight_recorder is None else args.flight_recorder}"
               f" event(s)"
               + (f", dump -> {args.trace_out}" if args.trace_out else ""))
+    registry = watchdog = None
+    if args.traffic or args.http_port is not None:
+        from repro.serving import MetricsRegistry
+
+        registry = MetricsRegistry()
+    if args.traffic:
+        # SLO burn-rate watchdog over the virtual clock: alerts land as
+        # tracer instants + serving_alerts_total counters (scrapeable
+        # via --http-port /metrics), and the page-severity degradation
+        # hook sheds lowest-priority admissions while active
+        from repro.serving import ShedDegrade, SLOWatchdog, default_rules
+
+        watchdog = SLOWatchdog(default_rules(slo_ttft_s=args.slo_ttft),
+                               metrics=registry, tracer=tracer,
+                               degrade_hook=ShedDegrade())
     engine = ServingEngine(cfg, target, slots=args.slots,
                            max_len=m + 24 + args.max_new + 16,
                            kv_layout=args.kv_layout,
@@ -375,8 +407,17 @@ def main():
                            fused_step=args.fused_step,
                            fused_chunk_tokens=args.fused_chunk_tokens,
                            spec_draft=spec_draft, spec_k=args.spec_k,
-                           tracer=tracer,
+                           tracer=tracer, metrics=registry,
+                           watchdog=watchdog,
                            **paged_kw)
+    http_server = None
+    if args.http_port is not None:
+        from repro.serving import TelemetryServer
+
+        http_server = TelemetryServer(engine, port=args.http_port)
+        port = http_server.start()
+        print(f"[edge] http telemetry on 127.0.0.1:{port} "
+              "(/metrics /healthz /debug/state /debug/trace)")
     if engine.tiers is not None:
         preloaded = engine.tiers.disk_names()
         print(f"[edge] tiered prefix cache: host capacity "
@@ -471,12 +512,17 @@ def main():
                   f"{row['completed']}/{row['requests']} done, TTFT p50 "
                   f"{row['ttft_p50_s']*1e3:.2f} ms, {row['slo_attained']} "
                   f"in SLO, {row['preemptions']} preempted")
+        fires = sum(1 for e in watchdog.alert_log if e["kind"] == "fire")
+        print(f"[edge] watchdog: {fires} alert fire(s), "
+              f"{len(watchdog.alert_log) - fires} clear(s) over "
+              f"{len(watchdog.rules)} burn-rate rule(s)")
         metrics["traffic"] = {
             "process": tcfg.process, "seed": args.seed,
             "traffic_tasks": tcfg.num_tasks, "rate_rps": tcfg.rate_rps,
             "zipf_alpha": tcfg.zipf_alpha,
             "priority_classes": tcfg.priority_classes,
-            "wall_s": wall, "generated": generated, **slo}
+            "wall_s": wall, "generated": generated,
+            "alerts": watchdog.report(), **slo}
     elif args.classify:
         hits = 0
         t0 = time.perf_counter()
@@ -558,6 +604,13 @@ def main():
         with open(args.metrics, "w") as f:
             json.dump(metrics, f, indent=1)
         print(f"metrics -> {args.metrics}")
+
+    if http_server is not None:
+        if args.http_linger:
+            print(f"[edge] http telemetry lingering {args.http_linger:g}s "
+                  f"on 127.0.0.1:{http_server.bound_port}", flush=True)
+            time.sleep(args.http_linger)
+        http_server.stop()
 
 
 if __name__ == "__main__":

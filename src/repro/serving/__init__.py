@@ -50,6 +50,15 @@ from repro.serving.telemetry import (
     Tracer,
     validate_chrome_trace,
 )
+from repro.serving.profiler import profile_spans, validate_profile_report
+from repro.serving.server import TelemetryServer
+from repro.serving.slo_watchdog import (
+    BurnRateRule,
+    SLOWatchdog,
+    ShedDegrade,
+    default_rules,
+    validate_alert_log,
+)
 from repro.serving.tiers import PromotionJob, TieredPrefixStore
 from repro.serving.traffic import (
     Trace,
@@ -69,4 +78,7 @@ __all__ = [
     "slo_metrics",
     "Tracer", "MetricsRegistry", "MetricGroup",
     "Counter", "Gauge", "Histogram", "validate_chrome_trace",
+    "TelemetryServer", "SLOWatchdog", "BurnRateRule", "ShedDegrade",
+    "default_rules", "validate_alert_log",
+    "profile_spans", "validate_profile_report",
 ]

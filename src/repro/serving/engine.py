@@ -209,7 +209,8 @@ class ServingEngine:
                  fused_chunk_tokens: int = 16,
                  spec_draft=None, spec_k: int = 0,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 watchdog=None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense or paged, got "
                              f"{kv_layout!r}")
@@ -258,6 +259,18 @@ class ServingEngine:
         attach = getattr(self.clock, "attach_metrics", None)
         if attach is not None:
             attach(self.metrics)  # charged-seconds counters by work kind
+        # SLO burn-rate watchdog (opt-in): fed from the TTFT/gap observe
+        # sites and stepped once per loop iteration.  Its degradation
+        # hook may set shed_floor (admission shedding) / degrade_hint
+        # (autotuner pressure) while a page alert is active.
+        self.watchdog = watchdog
+        self.shed_floor: Optional[int] = None
+        self.degrade_hint = False
+        self.last_step_t: Optional[float] = None  # /healthz liveness
+        if watchdog is not None:
+            if watchdog.clock is None:
+                watchdog.clock = self.clock
+            watchdog.attach_engine(self)
         self.priority_aging_s = priority_aging_s
         self.preemption = preemption
         self._autotune = autotune_budgets
@@ -865,7 +878,21 @@ class ServingEngine:
         # so the paged gate must size its window on that longer prefill
         can_seat = ((lambda r: self._can_admit(r, sched.resume_len(r.uid)))
                     if paged else None)
+        if self.watchdog is not None:
+            base_seat = can_seat
+
+            def can_seat(r, _base=base_seat):
+                # degradation hook: while a page alert holds shed_floor,
+                # park lower-priority admissions — but only while some
+                # slot is still running, so shedding an idle engine can
+                # never deadlock the simulation
+                if (self.shed_floor is not None
+                        and int(r.priority) >= self.shed_floor
+                        and sched.active_slots()):
+                    return False
+                return True if _base is None else _base(r)
         last_decode_done: Optional[float] = None
+        self.last_step_t = self.clock()
 
         def _finish(slot):
             req, toks = sched.finish(slot)
@@ -883,6 +910,10 @@ class ServingEngine:
                            rid=self._rids[req.uid], tokens=len(toks))
 
         while sched.has_work() or future:
+            wd = self.watchdog
+            if wd is not None:
+                wd_steps0 = self._counters["decode_steps"]
+                wd_toks0 = self._counters["tokens_generated"]
             # release timed arrivals whose moment has come
             now_s = self.clock() - epoch
             while future and future[0].arrival_s <= now_s:
@@ -999,6 +1030,9 @@ class ServingEngine:
                     self._m_ttft.observe(
                         log["first_token_s"] - log["arrival_s"],
                         priority=log["priority"])
+                    if wd is not None:
+                        wd.observe("ttft",
+                                   log["first_token_s"] - log["arrival_s"])
                 if sched.record_token(slot, tok):
                     _finish(slot)
             active = sched.active_slots()
@@ -1065,7 +1099,9 @@ class ServingEngine:
                     self._gap_samples.append(gap)
                     self._gap_window.append(gap)
                     self._m_gap.observe(gap)
-                last_decode_done = self.clock()
+                    if wd is not None:
+                        wd.observe("decode_gap", gap)
+                last_decode_done = self.last_step_t = self.clock()
                 if tr.enabled:
                     tr.span("engine", "decode_step", t_start,
                             last_decode_done, active=len(active))
@@ -1181,7 +1217,9 @@ class ServingEngine:
                     self._gap_samples.append(gap)
                     self._gap_window.append(gap)
                     self._m_gap.observe(gap)
-                last_decode_done = self.clock()
+                    if wd is not None:
+                        wd.observe("decode_gap", gap)
+                last_decode_done = self.last_step_t = self.clock()
                 if tr.enabled:
                     tr.span("engine", "fused_step", t_start,
                             last_decode_done, lanes=len(decode_lanes),
@@ -1228,6 +1266,10 @@ class ServingEngine:
                             self._m_ttft.observe(
                                 log["first_token_s"] - log["arrival_s"],
                                 priority=log["priority"])
+                            if wd is not None:
+                                wd.observe(
+                                    "ttft",
+                                    log["first_token_s"] - log["arrival_s"])
                         if sched.record_token(chunk_slot, tok):
                             _finish(chunk_slot)
                 for s in decode_lanes:
@@ -1299,6 +1341,16 @@ class ServingEngine:
                 if promoting:
                     self._promote_step(self.promote_layer_budget)
                     self._counters["promote_steps_interleaved"] += 1
+            if wd is not None:
+                # goodput proxy: tokens emitted per engine step this
+                # iteration (spec acceptance raises it above 1/lane)
+                dsteps = self._counters["decode_steps"] - wd_steps0
+                if dsteps:
+                    wd.observe(
+                        "tokens_per_step",
+                        (self._counters["tokens_generated"] - wd_toks0)
+                        / dsteps)
+                wd.step()
             if self._autotune and \
                     len(self._gap_window) >= self.autotune_interval:
                 self._autotune_step()
@@ -1366,7 +1418,9 @@ class ServingEngine:
         mean_gap = sum(window) / len(window)
         del window[:]
         init_c, init_p = self._budget_init
-        if mean_gap > self.target_decode_gap_s:
+        # a page alert's degradation hint counts as an overshoot: tighten
+        # background budgets even when the mean gap still looks healthy
+        if mean_gap > self.target_decode_gap_s or self.degrade_hint:
             changed = False
             if self.compile_token_budget is not None \
                     and self.compile_token_budget > 1:

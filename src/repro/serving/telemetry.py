@@ -442,6 +442,11 @@ class Histogram(_Metric):
         total = st["count"]
         if total == 0:
             return 0.0
+        if len(self.bounds) == 1:
+            # A single finite bucket gives no interpolation basis: every
+            # observation is either <= the bound or in +Inf, and a lower
+            # edge of 0 would fabricate precision.  Report the bound.
+            return self.bounds[0]
         rank = q * total
         cum = 0
         for i, c in enumerate(st["counts"]):

@@ -1,0 +1,34 @@
+"""Fixture: every way to get async span pairing wrong (span-pairing fires).
+
+A begin with no end anywhere in the module, an end with no begin, an
+early return that skips the same-function end, a dynamic span name, and
+a name outside the REQUIRED_SPANS taxonomy.
+"""
+
+
+def park_forever(tracer, req, aid):
+    # no end_async("waiting_on_prefix") anywhere in this module
+    tracer.begin_async("scheduler", "waiting_on_prefix", aid,
+                       prefix=req.prefix)
+
+
+def orphan_end(tracer, aid):
+    # no begin_async("promote_chunk") anywhere in this module
+    tracer.end_async("promoter", "promote_chunk", aid)
+
+
+def leaky_exit(tracer, job, aid):
+    tracer.begin_async("compiler", "compile_chunk", aid)
+    if job.cancelled:
+        return None  # span still open on this path
+    tracer.end_async("compiler", "compile_chunk", aid)
+    return job.result()
+
+
+def dynamic_name(tracer, name, aid):
+    tracer.begin_async("engine", name, aid)  # not statically checkable
+
+
+def off_taxonomy(tracer, aid):
+    tracer.begin_async("engine", "mystery_phase", aid)
+    tracer.end_async("engine", "mystery_phase", aid)

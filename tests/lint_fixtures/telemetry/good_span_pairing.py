@@ -1,0 +1,36 @@
+"""Fixture: disciplined async span pairing (span-pairing stays quiet).
+
+Same-function pairing keeps the end on every exit path (the end lives
+in a ``finally``), and the cross-function park/wake pair is legal
+because the module contains both sides of the name.
+"""
+
+
+def guarded_wait(tracer, clock, job, aid):
+    t0 = clock()
+    tracer.begin_async("scheduler", "waiting_on_prefix", aid, t=t0)
+    try:
+        if job.cancelled:
+            return None
+        return job.result()
+    finally:
+        tracer.end_async("scheduler", "waiting_on_prefix", aid)
+
+
+def straight_line(tracer, job, aid):
+    tracer.begin_async("compiler", "compile_chunk", aid)
+    result = job.result()
+    tracer.end_async("compiler", "compile_chunk", aid)
+    return result
+
+
+def park(tracer, req, aid):
+    # begin here, matching end in wake() below: cross-function pairing
+    # within one module is the engine's park/wake idiom
+    tracer.begin_async("scheduler", "waiting_on_prefix", aid,
+                       prefix=req.prefix)
+
+
+def wake(tracer, req, aid):
+    tracer.end_async("scheduler", "waiting_on_prefix", aid,
+                     prefix=req.prefix)

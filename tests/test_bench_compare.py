@@ -1,0 +1,153 @@
+"""Perf-regression gate tests: verdicts against hand-built bench docs —
+within-tolerance pass, bad-direction regression, improvements never
+flagged, missing metrics as regressions, scenario-mismatch refusal, and
+the CLI's exit-code contract.  Deterministic by construction: the same
+pair of files always yields the same verdict."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.bench_compare import (  # noqa: E402
+    DEFAULT_REL_TOL,
+    GATED_METRICS,
+    SCENARIO_KEYS,
+    compare,
+    find_traffic_section,
+    main,
+    scenario_mismatches,
+)
+
+SCEN = dict(seed=0, process="poisson", num_tasks=6, num_requests=16,
+            rate_rps=300.0, zipf_alpha=1.1, priority_classes=2, slots=2,
+            prefix_capacity=2, host_capacity=2, compile_token_budget=8,
+            promote_layer_budget=1, slo_ttft_s=0.02)
+
+FIXED = dict(decode_gap_p99_s=0.01, ttft_p99_s=0.02, goodput_rps=100.0,
+             tokens_per_step=1.5, tokens_per_s_per_device=900.0,
+             completed=16)
+
+
+def _section(fixed_over=None, **over):
+    fixed = dict(FIXED, **(fixed_over or {}))
+    sec = {**SCEN, "fixed": fixed}
+    sec.update(over)
+    return sec
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# section discovery + scenario identity
+# ---------------------------------------------------------------------------
+
+
+def test_find_traffic_section_both_layouts():
+    sec = _section()
+    assert find_traffic_section({"traffic": sec}) is sec  # serving_bench
+    assert find_traffic_section(sec) is sec               # bare section
+    assert find_traffic_section({"other": 1}) is None
+
+
+def test_scenario_mismatch_lists_differing_keys():
+    a, b = _section(), _section(seed=7, rate_rps=10.0)
+    mism = scenario_mismatches(a, b)
+    assert len(mism) == 2
+    assert any(m.startswith("seed:") for m in mism)
+    assert scenario_mismatches(a, _section()) == []
+    assert set(SCEN) == set(SCENARIO_KEYS)  # test doc covers every key
+
+
+# ---------------------------------------------------------------------------
+# compare() verdicts
+# ---------------------------------------------------------------------------
+
+
+def test_identical_runs_have_no_regressions():
+    lines, regs = compare(_section(), _section())
+    assert regs == []
+    assert len([ln for ln in lines if "-> ok" in ln]) == len(GATED_METRICS)
+
+
+def test_bad_direction_drift_is_regression():
+    # gap p99 +10% (lower is better) and goodput -10% (higher is better)
+    cur = _section(fixed_over=dict(decode_gap_p99_s=0.011,
+                                   goodput_rps=90.0))
+    lines, regs = compare(cur, _section())
+    assert {r[0] for r in regs} == {"decode_gap_p99_s", "goodput_rps"}
+    assert sum("REGRESSION" in ln for ln in lines) == 2
+
+
+def test_good_direction_drift_never_flags():
+    cur = _section(fixed_over=dict(decode_gap_p99_s=0.001,
+                                   ttft_p99_s=0.001, goodput_rps=500.0,
+                                   tokens_per_step=3.0,
+                                   tokens_per_s_per_device=2000.0,
+                                   completed=17))
+    _, regs = compare(cur, _section())
+    assert regs == []
+
+
+def test_rel_tol_is_the_boundary():
+    cur = _section(fixed_over=dict(decode_gap_p99_s=0.01 * 1.04))
+    assert compare(cur, _section(), rel_tol=DEFAULT_REL_TOL)[1] == []
+    assert compare(cur, _section(), rel_tol=0.01)[1] != []
+
+
+def test_missing_metric_is_a_regression():
+    cur = _section()
+    del cur["fixed"]["tokens_per_step"]
+    _, regs = compare(cur, _section())
+    assert regs == [("tokens_per_step", FIXED["tokens_per_step"],
+                     None, "missing")]
+
+
+def test_zero_baseline_tolerates_absolute_slack_only():
+    base = _section(fixed_over=dict(decode_gap_p99_s=0.0))
+    cur = _section(fixed_over=dict(decode_gap_p99_s=1e-12))
+    assert compare(cur, base)[1] == []  # inside the 1e-9 absolute slack
+    cur = _section(fixed_over=dict(decode_gap_p99_s=0.5))
+    assert compare(cur, base)[1] != []
+
+
+def test_profile_drift_is_informational_only():
+    prof = {"phases": {"decode": {"self_s": 0.03}}}
+    cur = _section(profile={"phases": {"decode": {"self_s": 0.06}}})
+    lines, regs = compare(cur, _section(profile=prof))
+    assert regs == []  # profile drift informs, never gates
+    assert any("[info] decode_self_s" in ln and "+100.00%" in ln
+               for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", {"traffic": _section()})
+    same = _write(tmp_path, "same.json", {"traffic": _section()})
+    worse = _write(tmp_path, "worse.json", {"traffic": _section(
+        fixed_over=dict(ttft_p99_s=0.2))})
+    other = _write(tmp_path, "other.json", {"traffic": _section(seed=9)})
+    empty = _write(tmp_path, "empty.json", {"ratio": 8})
+
+    assert main([same, "--baseline", base]) == 0
+    assert main([worse, "--baseline", base]) == 1
+    assert main([other, "--baseline", base]) == 2   # scenario mismatch
+    assert main([empty, "--baseline", base]) == 2   # no traffic section
+    assert main([str(tmp_path / "nope.json"), "--baseline", base]) == 2
+    # verdicts are deterministic: same files, same verdict
+    assert main([worse, "--baseline", base]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "within tolerance" in out

@@ -1,0 +1,177 @@
+"""Per-phase profiler tests: interval union/subtraction against hand
+arithmetic on synthetic Chrome traces, the fused-join exclusion, instant
+counting, schema validation failure modes, and a round-trip through a
+real :class:`Tracer` export."""
+
+import json
+
+import pytest
+
+from repro.serving import Tracer, profile_spans, validate_profile_report
+from repro.serving.profiler import (
+    PROFILE_REPORT_SCHEMA,
+    _merge,
+    _measure,
+    _subtract,
+)
+
+
+def _ev(name, t0_s, dur_s, **args):
+    return {"ph": "X", "name": name, "pid": 1, "tid": 1,
+            "ts": t0_s * 1e6, "dur": dur_s * 1e6, "args": args}
+
+
+def _inst(name, t_s):
+    return {"ph": "i", "name": name, "pid": 1, "tid": 1,
+            "ts": t_s * 1e6, "args": {}}
+
+
+def _trace(*events):
+    return {"traceEvents": list(events)}
+
+
+# ---------------------------------------------------------------------------
+# interval arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_merge_and_measure_hand_computed():
+    merged = _merge([(3.0, 8.0), (0.0, 5.0), (10.0, 11.0)])
+    assert merged == [(0.0, 8.0), (10.0, 11.0)]
+    assert _measure(merged) == pytest.approx(9.0)
+    assert _merge([]) == [] and _measure([]) == 0.0
+
+
+def test_subtract_hand_computed():
+    base = [(0.0, 10.0)]
+    # cut the middle, clip an edge, ignore a disjoint cut
+    cuts = [(2.0, 4.0), (9.0, 12.0), (20.0, 21.0)]
+    assert _subtract(base, cuts) == [(0.0, 2.0), (4.0, 9.0)]
+    assert _subtract(base, [(0.0, 10.0)]) == []  # full cover
+    assert _subtract(base, []) == base
+
+
+# ---------------------------------------------------------------------------
+# profile_spans
+# ---------------------------------------------------------------------------
+
+
+def test_profile_hand_computed_self_times():
+    """decode [0, 10ms] with a compile chunk [2, 4ms] riding inside it:
+    decode self-time is 8 ms; compile/prefill/promote keep self==total."""
+    report = profile_spans(_trace(
+        _ev("decode_step", 0.0, 0.010),
+        _ev("compile_chunk", 0.002, 0.002),
+        _ev("admission", 0.020, 0.002),
+        _ev("promote_chunk", 0.030, 0.001),
+    ))
+    ph = report["phases"]
+    assert ph["decode"] == {"spans": 1,
+                            "total_s": pytest.approx(0.010),
+                            "self_s": pytest.approx(0.008)}
+    assert ph["compile"]["total_s"] == pytest.approx(0.002)
+    assert ph["compile"]["self_s"] == pytest.approx(0.002)
+    assert ph["prefill"]["spans"] == 1
+    assert ph["promote"]["spans"] == 1
+    # wall = union of everything: 10 + 2 + 1 ms
+    assert report["wall_s"] == pytest.approx(0.013)
+    assert validate_profile_report(report) == []
+
+
+def test_overlapping_decode_spans_union_not_sum():
+    report = profile_spans(_trace(
+        _ev("decode_step", 0.0, 0.005),
+        _ev("fused_step", 0.003, 0.005),   # overlaps the first 2 ms
+    ))
+    assert report["phases"]["decode"]["spans"] == 2
+    assert report["phases"]["decode"]["total_s"] == pytest.approx(0.008)
+
+
+def test_fused_join_admission_excluded_from_prefill():
+    report = profile_spans(_trace(
+        _ev("admission", 0.0, 0.002),
+        _ev("admission", 0.010, 0.030, fused_join=True),
+    ))
+    # the join's span covers whole fused-step windows — counting it as
+    # prefill would double-book decode time
+    assert report["phases"]["prefill"]["spans"] == 1
+    assert report["phases"]["prefill"]["total_s"] == pytest.approx(0.002)
+    assert report["counts"]["fused_joins"] == 1
+
+
+def test_instants_counted_not_measured():
+    report = profile_spans(_trace(
+        _ev("decode_step", 0.0, 0.001),
+        _inst("spec_accept", 0.0005),
+        _inst("spec_accept", 0.0008),
+        _inst("preempt", 0.0002),
+        _inst("resume", 0.0004),
+        _inst("autotune", 0.0009),
+        _inst("finish", 0.001),            # not a counted instant
+    ))
+    assert report["counts"] == {"spec_accepts": 2, "preempts": 1,
+                                "resumes": 1, "autotunes": 1,
+                                "fused_joins": 0}
+    assert report["wall_s"] == pytest.approx(0.001)
+
+
+def test_unknown_spans_and_metadata_ignored():
+    report = profile_spans(_trace(
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+         "args": {"name": "engine"}},
+        _ev("mystery_span", 0.0, 1.0),
+        _ev("decode_step", 0.0, 0.001),
+    ))
+    assert report["wall_s"] == pytest.approx(0.001)
+
+
+def test_empty_trace_profiles_to_zero():
+    report = profile_spans(_trace())
+    assert report["wall_s"] == 0.0
+    assert all(st["spans"] == 0 and st["total_s"] == 0.0
+               for st in report["phases"].values())
+    assert validate_profile_report(report) == []
+
+
+# ---------------------------------------------------------------------------
+# validation + round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_validate_profile_report_catches_malformed():
+    good = profile_spans(_trace(_ev("decode_step", 0.0, 0.001)))
+    bad = json.loads(json.dumps(good))
+    bad["schema"] = "wrong/v9"
+    assert any("schema" in e for e in validate_profile_report(bad))
+    bad = json.loads(json.dumps(good))
+    del bad["phases"]["compile"]
+    assert any("missing" in e for e in validate_profile_report(bad))
+    bad = json.loads(json.dumps(good))
+    bad["phases"]["decode"]["self_s"] = 99.0  # self > total
+    assert any("exceeds" in e for e in validate_profile_report(bad))
+    bad = json.loads(json.dumps(good))
+    bad["phases"]["decode"]["total_s"] = -1.0
+    assert any("bad 'total_s'" in e for e in validate_profile_report(bad))
+    bad = json.loads(json.dumps(good))
+    bad["wall_s"] = 0.0  # smaller than the decode phase total
+    assert any("wall_s" in e for e in validate_profile_report(bad))
+    bad = json.loads(json.dumps(good))
+    bad["counts"]["preempts"] = 1.5
+    assert any("counts" in e for e in validate_profile_report(bad))
+
+
+def test_round_trip_through_real_tracer():
+    clock = iter(float(i) for i in range(100))
+    tr = Tracer(clock=lambda: next(clock))
+    tr.span("engine", "decode_step", 0.0, 0.5)
+    tr.span("compiler", "compile_chunk", 0.1, 0.2)
+    tr.instant("slot0", "preempt")
+    report = profile_spans(tr.chrome_trace())
+    assert report["schema"] == PROFILE_REPORT_SCHEMA
+    assert validate_profile_report(report) == []
+    assert report["phases"]["decode"]["self_s"] == pytest.approx(0.4)
+    assert report["counts"]["preempts"] == 1
+    # determinism: same trace, same bytes
+    again = profile_spans(tr.chrome_trace())
+    assert json.dumps(report, sort_keys=True) == \
+        json.dumps(again, sort_keys=True)

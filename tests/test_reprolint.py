@@ -48,6 +48,8 @@ def rules_hit(path: Path) -> set:
     ("serving/bad_demote.py", "serving/good_demote.py", "demote-guard"),
     ("statemachine_bad/scheduler.py", "statemachine_good/scheduler.py",
      "state-machine"),
+    ("telemetry/bad_span_pairing.py", "telemetry/good_span_pairing.py",
+     "span-pairing"),
     ("kernels/bad_kernel.py", "kernels/good_kernel.py", "pltpu-compat"),
     ("kernels/bad_kernel.py", "kernels/good_kernel.py", "blockspec-arity"),
     ("kernels/bad_kernel.py", "kernels/good_kernel.py", "ref-twin"),
@@ -89,6 +91,34 @@ def test_refcount_exception_edge_and_discard():
     assert any("may raise" in m for m in msgs)
     assert any("discarded" in m for m in msgs)
     assert any("return" in m for m in msgs)
+
+
+def test_span_pairing_finding_details():
+    msgs = [f.message for f in
+            lint_file(FIX / "telemetry/bad_span_pairing.py")
+            if f.rule == "span-pairing"]
+    assert any("no matching end_async" in m for m in msgs)
+    assert any("no matching begin_async" in m for m in msgs)
+    assert any("still open at return" in m for m in msgs)
+    assert any("string literal" in m for m in msgs)
+    assert sum("REQUIRED_SPANS" in m for m in msgs) == 2  # begin + end
+
+
+def test_span_pairing_taxonomy_mirrors_telemetry():
+    """The linter's literal mirror of REQUIRED_SPANS (kept so reprolint
+    stays stdlib-only) must track the runtime taxonomy."""
+    from tools.reprolint.serving_rules import _REQUIRED_SPANS
+    from repro.serving.telemetry import REQUIRED_SPANS
+    assert _REQUIRED_SPANS == REQUIRED_SPANS
+
+
+def test_span_pairing_only_in_serving_dirs():
+    src = ("def f(tracer, aid):\n"
+           "    tracer.begin_async('engine', 'mystery_phase', aid)\n")
+    assert lint_source("pkg/other/util.py", src,
+                       rule_ids=["span-pairing"]) == []
+    assert lint_source("pkg/serving/util.py", src,
+                       rule_ids=["span-pairing"]) != []
 
 
 def test_state_machine_requires_table():

@@ -1,0 +1,213 @@
+"""HTTP telemetry plane tests: every endpoint against a fake engine
+(status codes, content types, JSON shapes, the numpy-scalar encoder),
+lifecycle (ephemeral ports, context manager, restart guard), and one
+integration test scraping a *live* real engine mid-``serve()`` from
+another thread — proving the server never perturbs the token stream."""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import memcom
+from repro.models import transformer as tfm
+from repro.serving import (
+    MetricsRegistry,
+    ServingEngine,
+    SLOWatchdog,
+    TelemetryServer,
+    Tracer,
+    TrafficConfig,
+    VirtualClock,
+    default_rules,
+    generate_trace,
+    validate_chrome_trace,
+)
+
+
+def _get(port, path, timeout=5.0):
+    """(status, content_type, body) for a GET against the local server."""
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}{path}", timeout=timeout) as resp:
+            return resp.status, resp.headers["Content-Type"], \
+                resp.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        return e.code, e.headers["Content-Type"], \
+            e.read().decode("utf-8")
+
+
+class _FakeEngine:
+    """The exact read-only surface TelemetryServer touches."""
+
+    def __init__(self, *, with_watchdog=False, last_step_t=None):
+        self.metrics = MetricsRegistry()
+        self.metrics.counter("demo_total", "demo").inc(3)
+        self.clock = VirtualClock()
+        self.clock.advance(2.5)
+        self.tracer = Tracer(clock=self.clock)
+        self.tracer.span("engine", "decode_step", 1.0, 1.5)
+        self.last_step_t = last_step_t
+        self.slots = 2
+        self.watchdog = None
+        if with_watchdog:
+            self.watchdog = SLOWatchdog(default_rules(),
+                                        clock=self.clock,
+                                        metrics=self.metrics)
+
+    def stats(self):
+        return {"engine": {"decode_steps": 7,
+                           "np_scalar": np.int64(4)}}
+
+
+@pytest.fixture()
+def served():
+    eng = _FakeEngine(with_watchdog=True, last_step_t=2.0)
+    with TelemetryServer(eng, port=0) as srv:
+        yield eng, srv
+
+
+def test_metrics_endpoint_prometheus_text(served):
+    eng, srv = served
+    status, ctype, body = _get(srv.bound_port, "/metrics")
+    assert status == 200 and ctype.startswith("text/plain")
+    assert "demo_total 3" in body
+    # the watchdog registers its counter eagerly: scrapeable pre-alert
+    assert "serving_alerts_total" in body
+
+
+def test_healthz_liveness_on_injected_clock(served):
+    eng, srv = served
+    status, ctype, body = _get(srv.bound_port, "/healthz")
+    assert status == 200 and ctype == "application/json"
+    doc = json.loads(body)
+    assert doc["status"] == "ok"
+    assert doc["now"] == pytest.approx(2.5)
+    assert doc["last_step_t"] == pytest.approx(2.0)
+    assert doc["last_step_age_s"] == pytest.approx(0.5)
+    assert doc["slots"] == 2
+    assert doc["page_active"] is False and doc["alerts"] == 0
+
+
+def test_healthz_idle_before_first_step():
+    eng = _FakeEngine(last_step_t=None)
+    with TelemetryServer(eng, port=0) as srv:
+        doc = json.loads(_get(srv.bound_port, "/healthz")[2])
+    assert doc["status"] == "idle"
+    assert doc["last_step_age_s"] is None
+    assert "page_active" not in doc  # no watchdog attached
+
+
+def test_debug_state_jsonifies_numpy(served):
+    eng, srv = served
+    status, ctype, body = _get(srv.bound_port, "/debug/state")
+    assert status == 200 and ctype == "application/json"
+    doc = json.loads(body)
+    assert doc["engine"]["decode_steps"] == 7
+    assert doc["engine"]["np_scalar"] == 4  # .item()'d, not repr'd
+
+
+def test_debug_trace_is_valid_chrome_trace(served):
+    eng, srv = served
+    status, _, body = _get(srv.bound_port, "/debug/trace")
+    assert status == 200
+    trace = json.loads(body)
+    assert validate_chrome_trace(trace, require_spans=("decode_step",)) == []
+
+
+def test_unknown_route_404_and_post_405(served):
+    eng, srv = served
+    status, _, body = _get(srv.bound_port, "/nope")
+    assert status == 404 and "/nope" in body
+    req = urllib.request.Request(
+        f"http://127.0.0.1:{srv.bound_port}/metrics", data=b"x",
+        method="POST")
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=5)
+    assert ei.value.code == 405
+
+
+def test_route_exception_becomes_500():
+    eng = _FakeEngine()
+    eng.stats = lambda: (_ for _ in ()).throw(KeyError("boom"))
+    with TelemetryServer(eng, port=0) as srv:
+        status, _, body = _get(srv.bound_port, "/debug/state")
+    assert status == 500 and "KeyError" in body
+
+
+def test_lifecycle_restart_guard_and_stop_idempotent():
+    eng = _FakeEngine()
+    srv = TelemetryServer(eng, port=0)
+    port = srv.start()
+    assert port == srv.bound_port and port > 0
+    with pytest.raises(RuntimeError):
+        srv.start()
+    srv.stop()
+    srv.stop()  # idempotent
+    # the port is released: a fresh server can bind it again
+    srv2 = TelemetryServer(eng, port=port)
+    assert srv2.start() == port
+    srv2.stop()
+
+
+# ---------------------------------------------------------------------------
+# live engine: scrape while serve() runs, token stream unperturbed
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    return cfg, params, mc
+
+
+def _serve(cfg, params, mc, disk_dir, server=False, scrapes=None):
+    m = cfg.memcom.num_memory_tokens
+    trace = generate_trace(
+        TrafficConfig(num_tasks=5, num_requests=12, context_tokens=24,
+                      rate_rps=300.0, priority_classes=2), seed=0)
+    eng = ServingEngine(
+        cfg, params, slots=2, max_len=m + 32, compressor=mc,
+        compile_token_budget=8, prefix_capacity=2, host_capacity=2,
+        disk_dir=str(disk_dir), promote_layer_budget=1,
+        clock=VirtualClock(), priority_aging_s=0.05,
+        tracer=Tracer(), metrics=MetricsRegistry(),
+        watchdog=SLOWatchdog(default_rules(), metrics=None))
+    if not server:
+        out = eng.serve(list(trace.requests))
+        return [list(out[r.uid]) for r in trace.requests]
+    with TelemetryServer(eng, port=0) as srv:
+        box = {}
+
+        def _run():
+            box["out"] = eng.serve(list(trace.requests))
+
+        t = threading.Thread(target=_run)
+        t.start()
+        while t.is_alive():
+            scrapes.append(_get(srv.bound_port, "/healthz")[0])
+            scrapes.append(_get(srv.bound_port, "/metrics")[0])
+        t.join()
+        # post-run scrape sees the finished engine's full state
+        doc = json.loads(_get(srv.bound_port, "/debug/state")[2])
+        assert doc["engine"]["decode_steps"] > 0
+        trace_doc = json.loads(_get(srv.bound_port, "/debug/trace")[2])
+        assert validate_chrome_trace(
+            trace_doc, require_spans=("decode_step", "admission")) == []
+    return [list(box["out"][r.uid]) for r in trace.requests]
+
+
+def test_live_scrape_does_not_perturb_tokens(setup, tmp_path):
+    cfg, params, mc = setup
+    plain = _serve(cfg, params, mc, tmp_path / "plain")
+    scrapes = []
+    scraped = _serve(cfg, params, mc, tmp_path / "scraped",
+                     server=True, scrapes=scrapes)
+    assert scraped == plain  # scraping is read-only by construction
+    assert scrapes and all(s == 200 for s in scrapes)

@@ -1,0 +1,303 @@
+"""SLO burn-rate watchdog tests: hand-computed burn arithmetic over
+explicit timestamps, the two-window fire condition, clear hysteresis
+(including the silent-window clear), the ShedDegrade hook against a fake
+engine, alert-log schema validation, and — on the real engine under the
+churn scenario — byte-identical alert logs across two runs of one
+(scenario, seed)."""
+
+import json
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import memcom
+from repro.models import transformer as tfm
+from repro.serving import (
+    BurnRateRule,
+    MetricsRegistry,
+    ServingEngine,
+    ShedDegrade,
+    SLOWatchdog,
+    Tracer,
+    TrafficConfig,
+    VirtualClock,
+    default_rules,
+    generate_trace,
+    validate_alert_log,
+)
+
+
+def _rule(**kw):
+    base = dict(name="lat", metric="ttft", threshold=1.0, budget=0.5,
+                fast_window_s=2.0, slow_window_s=10.0,
+                fire_burn=1.0, clear_burn=0.5, severity="page")
+    base.update(kw)
+    return BurnRateRule(**base)
+
+
+# ---------------------------------------------------------------------------
+# burn arithmetic, hand-computed
+# ---------------------------------------------------------------------------
+
+
+def test_fire_with_hand_computed_burns():
+    wd = SLOWatchdog([_rule()])
+    wd.observe("ttft", 2.0, t=1.0)   # violates (> 1.0)
+    wd.observe("ttft", 0.5, t=1.5)   # ok
+    # fast [0, 2]: 1 bad of 2 -> frac 0.5 / budget 0.5 = burn 1.0
+    # slow [-8, 2]: same two samples -> burn 1.0; both >= fire_burn
+    events = wd.step(now=2.0)
+    assert [e["kind"] for e in events] == ["fire"]
+    assert events[0]["burn_fast"] == pytest.approx(1.0)
+    assert events[0]["burn_slow"] == pytest.approx(1.0)
+    assert events[0]["rule"] == "lat" and events[0]["severity"] == "page"
+    assert wd.firing("lat") and wd.page_active
+
+
+def test_clear_hysteresis_needs_burn_at_or_below_clear():
+    wd = SLOWatchdog([_rule()])
+    wd.observe("ttft", 2.0, t=1.0)
+    wd.observe("ttft", 0.5, t=1.5)
+    assert wd.step(now=2.0)[0]["kind"] == "fire"
+    # burn still 1.0 > clear_burn 0.5 in [0.5, 2.5]: no clear yet
+    assert wd.step(now=2.5) == []
+    # three good samples push the bad one out of the fast window:
+    # fast [1.5, 3.5] holds 4 samples, 0 bad -> burn 0.0 <= 0.5
+    for t in (3.0, 3.2, 3.4):
+        wd.observe("ttft", 0.5, t=t)
+    events = wd.step(now=3.5)
+    assert [e["kind"] for e in events] == ["clear"]
+    assert events[0]["burn_fast"] == pytest.approx(0.0)
+    assert not wd.firing("lat") and not wd.page_active
+
+
+def test_silent_fast_window_clears_but_never_fires():
+    wd = SLOWatchdog([_rule()])
+    # an empty window is not evidence either way: no samples, no fire
+    assert wd.step(now=1.0) == []
+    wd.observe("ttft", 2.0, t=1.0)
+    wd.observe("ttft", 2.0, t=1.5)
+    assert wd.step(now=2.0)[0]["kind"] == "fire"
+    # far future: fast window empty -> clear with burn_fast None
+    events = wd.step(now=100.0)
+    assert [e["kind"] for e in events] == ["clear"]
+    assert events[0]["burn_fast"] is None
+
+
+def test_fire_requires_both_windows_hot():
+    wd = SLOWatchdog([_rule()])
+    # seven good samples age into the slow window only
+    for i in range(7):
+        wd.observe("ttft", 0.5, t=1.0 + i)
+    wd.observe("ttft", 2.0, t=9.0)
+    wd.observe("ttft", 2.0, t=9.5)
+    # fast [8, 10]: 2/2 bad -> burn 4.0; slow [0, 10]: 2/9 bad ->
+    # (2/9)/0.5 = 0.444 < fire_burn -> the blip filter holds
+    assert wd.step(now=10.0) == []
+    assert not wd.firing("lat")
+
+
+def test_lt_op_fires_on_throughput_floor():
+    wd = SLOWatchdog([_rule(name="floor", metric="tokens_per_step",
+                            threshold=0.5, op="lt", severity="ticket")])
+    wd.observe("tokens_per_step", 0.2, t=1.0)
+    wd.observe("tokens_per_step", 0.1, t=1.5)
+    events = wd.step(now=2.0)
+    assert [e["kind"] for e in events] == ["fire"]
+    assert events[0]["severity"] == "ticket"
+    assert not wd.page_active  # ticket severity never pages
+
+
+def test_unwatched_metric_is_dropped():
+    wd = SLOWatchdog([_rule()])
+    wd.observe("decode_gap", 99.0, t=1.0)  # no rule watches this signal
+    assert wd._samples == {}
+    assert wd.step(now=2.0) == []
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        _rule(budget=0.0)
+    with pytest.raises(ValueError):
+        _rule(fast_window_s=5.0, slow_window_s=1.0)
+    with pytest.raises(ValueError):
+        _rule(severity="sev1")
+    with pytest.raises(ValueError):
+        _rule(op="ge")
+    with pytest.raises(ValueError):
+        _rule(clear_burn=2.0, fire_burn=1.0)
+    with pytest.raises(ValueError):
+        SLOWatchdog([_rule(), _rule()])  # duplicate names
+    with pytest.raises(ValueError):
+        SLOWatchdog([_rule()]).now()  # no clock, no explicit t
+
+
+# ---------------------------------------------------------------------------
+# emission: counters, tracer instants, the alert log
+# ---------------------------------------------------------------------------
+
+
+def _fire_once(wd):
+    wd.observe("ttft", 2.0, t=1.0)
+    wd.observe("ttft", 2.0, t=1.5)
+    return wd.step(now=2.0)
+
+
+def test_alert_counter_renders_before_and_after_fire():
+    reg = MetricsRegistry()
+    wd = SLOWatchdog([_rule()], metrics=reg)
+    # eagerly registered: scrapeable before any alert
+    assert "serving_alerts_total" in reg.render_prometheus()
+    _fire_once(wd)
+    assert ('serving_alerts_total{rule="lat",severity="page"} 1'
+            in reg.render_prometheus())
+
+
+def test_tracer_gets_alert_instants():
+    tr = Tracer(clock=lambda: 0.0)
+    wd = SLOWatchdog([_rule()], tracer=tr)
+    _fire_once(wd)
+    wd.step(now=100.0)
+    names = [e["name"] for e in tr.events()]
+    assert names == ["alert_fire:lat", "alert_clear:lat"]
+    assert tr.events()[0]["track"] == "watchdog"
+
+
+def test_report_roundtrip_and_determinism():
+    def run():
+        wd = SLOWatchdog([_rule()])
+        _fire_once(wd)
+        wd.step(now=100.0)
+        return wd
+    a, b = run(), run()
+    assert a.dumps() == b.dumps()  # byte-identical serialization
+    doc = json.loads(a.dumps())
+    assert validate_alert_log(doc) == []
+    assert doc["fires"] == 1 and doc["clears"] == 1
+
+
+def test_validate_alert_log_catches_malformed():
+    wd = SLOWatchdog([_rule()])
+    _fire_once(wd)
+    good = wd.report()
+    bad = json.loads(json.dumps(good))
+    bad["events"][0]["kind"] = "oops"
+    assert any("bad kind" in e for e in validate_alert_log(bad))
+    bad = json.loads(json.dumps(good))
+    bad["events"].append(dict(bad["events"][0]))  # double fire
+    assert any("double fire" in e for e in validate_alert_log(bad))
+    bad = json.loads(json.dumps(good))
+    bad["events"].append(dict(bad["events"][0], kind="clear", t=0.0))
+    assert any("not monotonic" in e for e in validate_alert_log(bad))
+    bad = json.loads(json.dumps(good))
+    bad["events"][0]["kind"] = "clear"
+    assert any("clear without fire" in e for e in validate_alert_log(bad))
+    bad = json.loads(json.dumps(good))
+    bad["fires"] = 7
+    assert any("fires count" in e for e in validate_alert_log(bad))
+    bad = json.loads(json.dumps(good))
+    bad["events"][0]["rule"] = "mystery"
+    assert any("unknown rule" in e for e in validate_alert_log(bad))
+
+
+# ---------------------------------------------------------------------------
+# degradation hook
+# ---------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    def __init__(self):
+        self.shed_floor = None
+        self.degrade_hint = False
+        self.metrics = MetricsRegistry()
+
+
+def test_shed_degrade_on_page_fire_and_clear():
+    eng = _FakeEngine()
+    wd = SLOWatchdog([_rule()], degrade_hook=ShedDegrade())
+    wd.attach_engine(eng)
+    _fire_once(wd)
+    assert eng.shed_floor == 1 and eng.degrade_hint is True
+    snap = eng.metrics.snapshot()
+    assert snap["serving_degradations_total"]["series"]["action=shed"] == 1
+    wd.step(now=100.0)  # silent window -> clear -> restore
+    assert eng.shed_floor is None and eng.degrade_hint is False
+    snap = eng.metrics.snapshot()
+    assert snap["serving_degradations_total"]["series"]["action=restore"] == 1
+
+
+def test_ticket_alert_never_sheds():
+    eng = _FakeEngine()
+    wd = SLOWatchdog([_rule(severity="ticket")],
+                     degrade_hook=ShedDegrade())
+    wd.attach_engine(eng)
+    _fire_once(wd)
+    assert eng.shed_floor is None and eng.degrade_hint is False
+
+
+def test_shed_persists_until_last_page_clears():
+    rules = [_rule(name="a"), _rule(name="b", fast_window_s=1.0)]
+    eng = _FakeEngine()
+    wd = SLOWatchdog(rules, degrade_hook=ShedDegrade())
+    wd.attach_engine(eng)
+    wd.observe("ttft", 2.0, t=1.0)
+    wd.observe("ttft", 2.0, t=1.5)
+    wd.step(now=2.0)  # both fire
+    assert wd.firing("a") and wd.firing("b") and eng.shed_floor == 1
+    # b's 1s fast window empties first: one page still active -> no undo
+    wd.step(now=3.1)
+    assert not wd.firing("b") and wd.firing("a")
+    assert eng.shed_floor == 1
+    wd.step(now=100.0)
+    assert not wd.page_active and eng.shed_floor is None
+
+
+# ---------------------------------------------------------------------------
+# on the real engine: alert log is a pure function of (scenario, seed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm-135m")
+    params = tfm.init_params(cfg, 0)
+    mc = memcom.init_memcom(cfg, params, 1)
+    return cfg, params, mc
+
+
+def _churn_with_watchdog(cfg, params, mc, disk_dir):
+    """The test_traffic churn scenario with an SLO set so tight that the
+    watchdog must fire: every TTFT violates a 0.5 ms SLO."""
+    m = cfg.memcom.num_memory_tokens
+    trace = generate_trace(
+        TrafficConfig(num_tasks=5, num_requests=12, context_tokens=24,
+                      rate_rps=300.0, priority_classes=2), seed=0)
+    wd = SLOWatchdog(default_rules(slo_ttft_s=0.0005, slo_gap_s=0.0005),
+                     metrics=MetricsRegistry(),
+                     degrade_hook=ShedDegrade())
+    eng = ServingEngine(
+        cfg, params, slots=2, max_len=m + 32, compressor=mc,
+        compile_token_budget=8, prefix_capacity=2,
+        host_capacity=2, disk_dir=str(disk_dir),
+        promote_layer_budget=1, clock=VirtualClock(),
+        priority_aging_s=0.05, watchdog=wd)
+    out = eng.serve(list(trace.requests))
+    tokens = [list(out[r.uid]) for r in trace.requests]
+    return wd, eng, tokens
+
+
+def test_engine_alert_log_deterministic_and_fires(setup, tmp_path):
+    cfg, params, mc = setup
+    wd1, eng1, tok1 = _churn_with_watchdog(cfg, params, mc,
+                                           tmp_path / "a")
+    wd2, eng2, tok2 = _churn_with_watchdog(cfg, params, mc,
+                                           tmp_path / "b")
+    assert wd1.report()["fires"] > 0, "tight SLO produced no alerts"
+    assert wd1.dumps() == wd2.dumps()  # byte-identical alert sequences
+    assert validate_alert_log(wd1.report()) == []
+    assert tok1 == tok2
+    # the paging TTFT rule fired, so the degradation hook acted
+    assert wd1._alerts_total is not None
+    assert "serving_degradations_total" in eng1.metrics.snapshot()
+    # engine completed every request even while shedding admissions
+    assert len(tok1) == 12 and all(len(t) > 0 for t in tok1)

@@ -123,6 +123,27 @@ def test_histogram_hand_computed_quantiles():
         Histogram("bad", buckets=(2.0, 1.0))  # not strictly increasing
 
 
+def test_histogram_quantile_edge_cases():
+    """Regression: an empty histogram reports 0.0 from any quantile
+    (never NaN or a crash), and a single finite bucket reports its bound
+    — interpolating against the fabricated 0 lower edge would invent
+    precision the buckets don't have."""
+    assert Histogram("e", buckets=(1.0, 2.0)).quantile(0.5) == 0.0
+    assert Histogram("e2", buckets=(1.0, 2.0)).quantile(0.99) == 0.0
+    h = Histogram("one", buckets=(4.0,))
+    assert h.quantile(0.5) == 0.0       # still empty -> 0.0
+    h.observe(3.0)
+    assert h.quantile(0.5) == 4.0       # single bucket -> the bound
+    h.observe(100.0)                    # lands in +Inf
+    assert h.quantile(0.99) == 4.0      # clamps to the only finite bound
+    assert h.quantile(0.0) == 4.0
+    # labeled series keep per-series behavior: one observed, one empty
+    h2 = Histogram("lab", buckets=(2.0,), labelnames=("k",))
+    h2.observe(1.0, k="a")
+    assert h2.quantile(0.5, k="a") == 2.0
+    assert h2.quantile(0.5, k="b") == 0.0
+
+
 def test_prometheus_text_exposition():
     reg = MetricsRegistry()
     reg.counter("zebra_total", "last alphabetically").inc(7)

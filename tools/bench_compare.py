@@ -1,0 +1,177 @@
+"""Deterministic perf-regression gate over the traffic bench.
+
+Diffs a current ``artifacts/bench/*.json`` (``serving_bench.json`` or
+``traffic_bench.json``) against a committed baseline and exits non-zero
+on a virtual-clock metric regression.  This is only sound because the
+traffic section runs on a :class:`~repro.serving.clock.VirtualClock`:
+for one (scenario, seed) the scoreboard is a pure function of the code,
+so any drift beyond tolerance is a real behavior change, not noise.
+
+The gate reads the **fixed-budget** sub-run (the autotuned run resizes
+its own budgets, so its numbers track the controller, not the engine)
+and refuses to compare across different scenarios: if the baseline's
+seed/load/sizing keys differ from the current run's, that is a baseline
+refresh, not a regression, and the tool exits 2 telling you so.
+
+Gated metrics and their directions::
+
+    decode_gap_p99_s   lower is better
+    ttft_p99_s         lower is better
+    goodput_rps        higher is better
+    tokens_per_step    higher is better
+    tokens_per_s_per_device  higher is better
+    completed          higher is better
+
+Usage::
+
+    python -m tools.bench_compare artifacts/bench/serving_bench.json \\
+        --baseline artifacts/bench/baseline/traffic_bench.json
+
+Exit codes: 0 within tolerance, 1 regression, 2 usage/scenario errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+#: metric -> direction ("lower" | "higher"); read from section["fixed"]
+GATED_METRICS = (
+    ("decode_gap_p99_s", "lower"),
+    ("ttft_p99_s", "lower"),
+    ("goodput_rps", "higher"),
+    ("tokens_per_step", "higher"),
+    ("tokens_per_s_per_device", "higher"),
+    ("completed", "higher"),
+)
+
+#: scenario identity: comparing across different values of these keys is
+#: meaningless, so the gate refuses rather than report green/red noise
+SCENARIO_KEYS = (
+    "seed", "process", "num_tasks", "num_requests", "rate_rps",
+    "zipf_alpha", "priority_classes", "slots", "prefix_capacity",
+    "host_capacity", "compile_token_budget", "promote_layer_budget",
+    "slo_ttft_s",
+)
+
+DEFAULT_REL_TOL = 0.05
+
+
+def find_traffic_section(doc: dict) -> Optional[dict]:
+    """Locate the traffic section: top-level ``traffic`` key
+    (traffic_bench.json / serving_bench.json) or the doc itself if it
+    already carries the scenario keys."""
+    sec = doc.get("traffic")
+    if isinstance(sec, dict):
+        return sec
+    if "fixed" in doc and "seed" in doc:
+        return doc
+    return None
+
+
+def scenario_mismatches(cur: dict, base: dict) -> List[str]:
+    out = []
+    for k in SCENARIO_KEYS:
+        if cur.get(k) != base.get(k):
+            out.append(f"{k}: current={cur.get(k)!r} "
+                       f"baseline={base.get(k)!r}")
+    return out
+
+
+def compare(cur: dict, base: dict,
+            rel_tol: float = DEFAULT_REL_TOL
+            ) -> Tuple[List[str], List[Tuple]]:
+    """Compare the fixed sub-runs; returns (report_lines, regressions).
+
+    A metric regresses when it moves in its bad direction by more than
+    ``rel_tol`` relative to the baseline value (absolute slack 1e-9 so
+    a zero baseline cannot make every nonzero reading a regression of
+    infinite ratio).
+    """
+    cf, bf = cur.get("fixed", {}), base.get("fixed", {})
+    lines: List[str] = []
+    regressions: List[Tuple] = []
+    for metric, direction in GATED_METRICS:
+        b, c = bf.get(metric), cf.get(metric)
+        if b is None or c is None:
+            regressions.append((metric, b, c, "missing"))
+            lines.append(f"  {metric:<26} MISSING "
+                         f"(baseline={b!r} current={c!r})")
+            continue
+        b, c = float(b), float(c)
+        slack = rel_tol * abs(b) + 1e-9
+        bad = (c > b + slack) if direction == "lower" else (c < b - slack)
+        delta = c - b
+        pct = (delta / b * 100.0) if b else float("inf") if delta else 0.0
+        verdict = "REGRESSION" if bad else "ok"
+        lines.append(f"  {metric:<26} base={b:.6g} cur={c:.6g} "
+                     f"delta={pct:+.2f}% ({direction} is better) "
+                     f"-> {verdict}")
+        if bad:
+            regressions.append((metric, b, c, f"{pct:+.2f}%"))
+    # informational: per-phase self-time drift from the profiler report
+    cp = (cur.get("profile") or {}).get("phases", {})
+    bp = (base.get("profile") or {}).get("phases", {})
+    for phase in sorted(set(cp) & set(bp)):
+        b, c = bp[phase].get("self_s"), cp[phase].get("self_s")
+        if isinstance(b, (int, float)) and isinstance(c, (int, float)):
+            pct = ((c - b) / b * 100.0) if b else 0.0
+            lines.append(f"  [info] {phase}_self_s".ljust(28)
+                         + f" base={b:.6g} cur={c:.6g} delta={pct:+.2f}%")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on virtual-clock perf regressions vs a "
+                    "committed bench baseline")
+    ap.add_argument("current", help="bench JSON from the run under test")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline bench JSON")
+    ap.add_argument("--rel-tol", type=float, default=DEFAULT_REL_TOL,
+                    help="allowed relative drift in the bad direction "
+                         f"(default {DEFAULT_REL_TOL})")
+    args = ap.parse_args(argv)
+
+    docs: Dict[str, dict] = {}
+    for label, path in (("current", args.current),
+                        ("baseline", args.baseline)):
+        try:
+            with open(path) as fh:
+                docs[label] = json.load(fh)
+        except (OSError, ValueError) as e:
+            print(f"bench-compare: cannot read {label} {path!r}: {e}",
+                  file=sys.stderr)
+            return 2
+    cur = find_traffic_section(docs["current"])
+    base = find_traffic_section(docs["baseline"])
+    if cur is None or base is None:
+        which = "current" if cur is None else "baseline"
+        print(f"bench-compare: no traffic section in the {which} file",
+              file=sys.stderr)
+        return 2
+    mism = scenario_mismatches(cur, base)
+    if mism:
+        print("bench-compare: baseline scenario mismatch — refresh the "
+              "baseline instead of comparing apples to oranges:")
+        for m in mism:
+            print(f"  {m}")
+        return 2
+    lines, regressions = compare(cur, base, rel_tol=args.rel_tol)
+    print(f"bench-compare: {args.current} vs {args.baseline} "
+          f"(rel tol {args.rel_tol:g})")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"bench-compare: {len(regressions)} regression(s) — "
+              "investigate, or refresh artifacts/bench/baseline/ with "
+              "justification in the PR")
+        return 1
+    print("bench-compare: within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -481,3 +481,228 @@ class StateMachineRule(Rule):
                     f"Scheduler.{name}() moves requests between stages "
                     "but never records the move via _transition() — the "
                     "sanitizer and the linter cannot see this edge")
+
+
+# ---------------------------------------------------------------------------
+# span-pairing
+# ---------------------------------------------------------------------------
+
+_SPAN_BEGIN = "begin_async"
+_SPAN_END = "end_async"
+
+#: mirror of ``repro.serving.telemetry.REQUIRED_SPANS`` — duplicated as a
+#: literal so the linter stays stdlib-only with no src/ import; a test in
+#: tests/test_reprolint.py cross-validates the two tuples.
+_REQUIRED_SPANS = ("admission", "waiting_on_prefix", "compile_chunk",
+                   "promote_chunk", "preempt", "resume", "decode_step")
+
+
+@rule
+class SpanPairingRule(Rule):
+    id = "span-pairing"
+    family = "serving"
+    description = (
+        "Every Tracer async span begin (begin_async) must have a "
+        "matching end_async: span names must be string literals drawn "
+        "from the REQUIRED_SPANS taxonomy, every begin name needs an end "
+        "somewhere in the module (cross-function park/wake pairing is "
+        "legal), and when a function contains both the begin and the "
+        "end, the end must cover every exit path — an early return or "
+        "uncovered raise leaves the span open forever in the trace.")
+
+    def applies_to(self, path: str) -> bool:
+        return Path(path).parent.name in ("serving", "telemetry")
+
+    # ---- collection ----
+
+    @staticmethod
+    def _span_calls(tree) -> List[Tuple[str, ast.Call]]:
+        """All (kind, call) tracer async-span call sites in ``tree``."""
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in (_SPAN_BEGIN, _SPAN_END):
+                out.append((node.func.attr, node))
+        return out
+
+    @staticmethod
+    def _literal_name(call: ast.Call) -> Optional[str]:
+        """The span-name argument (track, name, aid, ...) as a string
+        literal, or None when dynamic."""
+        if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant) \
+                and isinstance(call.args[1].value, str):
+            return call.args[1].value
+        return None
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        calls = self._span_calls(mod.tree)
+        if not calls:
+            return ()
+        parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(mod.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        self._parents = parents
+        self._mod = mod
+        self._findings: List[Finding] = []
+
+        begins: Dict[str, List[ast.Call]] = {}
+        ends: Dict[str, List[ast.Call]] = {}
+        for kind, call in calls:
+            name = self._literal_name(call)
+            if name is None:
+                self._findings.append(mod.finding(
+                    self.id, call,
+                    f"{call.func.attr}() must name its span as a string "
+                    "literal so begin/end pairing is statically checkable"))
+                continue
+            if name not in _REQUIRED_SPANS:
+                self._findings.append(mod.finding(
+                    self.id, call,
+                    f"async span name {name!r} is not in the REQUIRED_SPANS "
+                    f"taxonomy {_REQUIRED_SPANS} — extend the taxonomy in "
+                    "telemetry.py (and this rule's mirror) or reuse an "
+                    "existing phase name"))
+            (begins if kind == _SPAN_BEGIN else ends).setdefault(
+                name, []).append(call)
+
+        # module-level pairing: cross-function begin/end is legal (the
+        # engine parks in _submit and wakes in the drain methods), but a
+        # name begun with no end anywhere — or vice versa — can never pair
+        for name, sites in sorted(begins.items()):
+            if name not in ends:
+                for call in sites:
+                    self._findings.append(mod.finding(
+                        self.id, call,
+                        f"begin_async({name!r}) has no matching "
+                        "end_async anywhere in this module — the span "
+                        "stays open forever in the trace"))
+        for name, sites in sorted(ends.items()):
+            if name not in begins:
+                for call in sites:
+                    self._findings.append(mod.finding(
+                        self.id, call,
+                        f"end_async({name!r}) has no matching "
+                        "begin_async anywhere in this module — the end "
+                        "event can never pair"))
+
+        # intra-function exit-path coverage: when one function holds both
+        # the begin and the end of a name, the end must be reached on
+        # every exit path after the begin
+        for fn in ast.walk(mod.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_function(fn)
+        return self._findings
+
+    # ---- the walk (same shape as the refcount may-leak analysis) ----
+
+    def _check_function(self, fn) -> None:
+        fn_begins: Set[str] = set()
+        fn_ends: Set[str] = set()
+        for kind, call in self._span_calls(fn):
+            name = self._literal_name(call)
+            if name is None:
+                continue
+            (fn_begins if kind == _SPAN_BEGIN else fn_ends).add(name)
+        # names begun here but ended elsewhere pair cross-function; only
+        # same-function pairs get the all-exit-paths obligation
+        self._tracked = fn_begins & fn_ends
+        if not self._tracked:
+            return
+        open_spans: Dict[str, int] = {}
+        self._span_walk(fn.body, open_spans)
+        self._flag_open(open_spans,
+                        fn.body[-1].lineno if fn.body else fn.lineno,
+                        "function exit", covered=frozenset())
+
+    def _flag_open(self, open_spans: Dict[str, int], line: int,
+                   where: str, covered: frozenset) -> None:
+        for name, begin_line in sorted(open_spans.items()):
+            if name in covered:
+                continue
+            self._findings.append(self._mod.finding(
+                self.id, line,
+                f"async span {name!r} opened at line {begin_line} is "
+                f"still open at {where} — call end_async on this path or "
+                "move the end into a finally"))
+        open_spans.clear()
+
+    def _span_walk(self, stmts: List[ast.stmt],
+                   open_spans: Dict[str, int]) -> bool:
+        """Walk a statement list; returns False when the block always
+        terminates (return/raise) before falling through."""
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Return, ast.Raise)):
+                where = "return" if isinstance(stmt, ast.Return) else "raise"
+                self._flag_open(open_spans, stmt.lineno, where,
+                                self._ended_by_enclosing(stmt))
+                return False
+            if isinstance(stmt, ast.If):
+                s_body, s_else = dict(open_spans), dict(open_spans)
+                ft_body = self._span_walk(stmt.body, s_body)
+                ft_else = self._span_walk(stmt.orelse, s_else)
+                merged: Dict[str, int] = {}
+                if ft_body:
+                    merged.update(s_body)
+                if ft_else:
+                    merged.update(s_else)
+                open_spans.clear()
+                open_spans.update(merged)
+                if not ft_body and not ft_else:
+                    return False
+                continue
+            if isinstance(stmt, (ast.For, ast.While)):
+                body_state = dict(open_spans)
+                self._span_walk(stmt.body, body_state)
+                self._span_walk(stmt.orelse, body_state)
+                open_spans.clear()
+                open_spans.update(body_state)
+                continue
+            if isinstance(stmt, ast.Try):
+                body_state = dict(open_spans)
+                ft = self._span_walk(stmt.body, body_state)
+                for h in stmt.handlers:
+                    self._span_walk(h.body, dict(open_spans))
+                if stmt.finalbody:
+                    self._span_walk(stmt.finalbody, body_state)
+                open_spans.clear()
+                open_spans.update(body_state)
+                if not ft and not stmt.finalbody:
+                    return False
+                continue
+            if isinstance(stmt, ast.With):
+                self._span_walk(stmt.body, open_spans)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested defs analyzed on their own
+            for kind, call in self._span_calls(stmt):
+                name = self._literal_name(call)
+                if name is None or name not in self._tracked:
+                    continue
+                if kind == _SPAN_END:
+                    open_spans.pop(name, None)
+                else:
+                    open_spans[name] = call.lineno
+        return True
+
+    def _ended_by_enclosing(self, node: ast.AST) -> frozenset:
+        """Span names a lexically enclosing ``try``'s ``finally`` (or a
+        handler) ends — those exit edges are covered."""
+        covered: Set[str] = set()
+        cur = self._parents.get(node)
+        while cur is not None and not isinstance(
+                cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if isinstance(cur, ast.Try):
+                cleanup: List[ast.stmt] = list(cur.finalbody)
+                for h in cur.handlers:
+                    cleanup.extend(h.body)
+                for kind, call in self._span_calls(
+                        ast.Module(body=cleanup, type_ignores=[])):
+                    if kind == _SPAN_END:
+                        name = self._literal_name(call)
+                        if name is not None:
+                            covered.add(name)
+            cur = self._parents.get(cur)
+        return frozenset(covered)
